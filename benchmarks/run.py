@@ -1,0 +1,33 @@
+"""Benchmark harness: one function per paper table. CSV: name,us_per_call,derived."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import paper_tables as P
+    from . import bench_kernels as K
+
+    suites = [
+        ("Fig8a filter speedups", P.bench_filter_speedup),
+        ("Fig8b full-query speedups", P.bench_full_query_speedup),
+        ("Table4 instruction cycles", P.bench_instruction_cycles),
+        ("Table5 cycle breakdown", P.bench_query_breakdown),
+        ("Fig11-13 energy", P.bench_energy),
+        ("Fig15 endurance", P.bench_endurance),
+        ("Fig14 power", P.bench_power),
+        ("TPU-native kernels (beyond paper)", K.run_benches),
+    ]
+    print("name,us_per_call,derived")
+    bad = 0
+    for title, fn in suites:
+        print(f"# {title}", file=sys.stderr)
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+            if "band=False" in derived or "ok=False" in derived:
+                bad += 1
+    print(f"# out-of-band rows: {bad}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

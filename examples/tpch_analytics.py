@@ -1,0 +1,43 @@
+"""TPC-H analytics end-to-end: the paper's evaluation, miniaturised.
+
+Generates TPC-H at a small scale factor, executes the paper's query set on
+the bulk-bitwise engine AND the column-scan baseline, verifies equality,
+and prints the paper-scale (SF=1000) modeled speedup/energy/endurance —
+the numbers Figs. 8/11/15 report.
+
+    PYTHONPATH=src python examples/tpch_analytics.py [--sf 0.01]
+"""
+import argparse
+
+from repro.db import database, queries, tpch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.003)
+    ap.add_argument("--queries", nargs="*", default=None)
+    args = ap.parse_args()
+
+    print(f"generating TPC-H sf={args.sf} ...")
+    db = database.PimDatabase(tpch.generate(sf=args.sf, seed=42))
+    specs = queries.all_queries()
+    if args.queries:
+        specs = [q for q in specs if q.name in args.queries]
+
+    print(f"{'query':9s} {'kind':7s} {'cycles':>9s} {'speedup':>8s} "
+          f"{'readred':>8s} {'energy':>7s} {'endur(10y)':>10s} verified")
+    for spec in specs:
+        pim = db.run_pim(spec)
+        base = db.run_baseline(spec)
+        ok = all((pim.relations[r].mask == base.relations[r].mask).all()
+                 for r in spec.filters) and pim.aggregates == base.aggregates
+        rep = database.cost_report(pim, sf_scale=1000 / args.sf)
+        print(f"{spec.name:9s} {spec.kind:7s} {rep.cycles['total']:>9d} "
+              f"{rep.speedup:>8.1f} {rep.read_reduction:>8.1f} "
+              f"{rep.energy_saving:>7.2f} "
+              f"{rep.endurance_ops_per_cell_10y:>10.2e} "
+              f"{'✓' if ok else 'MISMATCH'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharded checkpointing with atomic manifests."""
+from . import checkpoint  # noqa: F401

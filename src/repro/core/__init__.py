@@ -1,0 +1,3 @@
+"""PIMDB core: bit-sliced bulk-bitwise analytics engine (paper's contribution)."""
+from . import bitslice, cost_model, engine, isa  # noqa: F401
+from .engine import Engine, PimRelation  # noqa: F401

@@ -1,0 +1,86 @@
+"""Distributed bulk-bitwise analytics: record-sharded relations.
+
+The paper's scale-out story: a relation spans many huge-pages across many
+PIM modules; one PIM request is broadcast to every page, each module's
+crossbars compute locally, and the host combines per-crossbar partials.
+Mapped to JAX: relations are sharded along the record axis over the
+("pod","data") mesh axes, every device executes the same bit-serial
+program on its shard (pure SPMD — the broadcast is the program itself),
+and the combine is a `psum` / gather of per-shard partials.
+
+This module provides shard_map-wrapped filter/aggregate entry points used
+by the data pipeline and by the analytics examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import engine as eng
+
+
+def shard_relation_planes(planes: jnp.ndarray, mesh: Mesh,
+                          axes: Sequence[str] = ("data",)) -> jnp.ndarray:
+    """Place (n_bits, W) planes with the word axis sharded over ``axes``."""
+    spec = P(None, tuple(axes))
+    return jax.device_put(planes, NamedSharding(mesh, spec))
+
+
+def distributed_filter(mesh: Mesh, predicate_fn: Callable[..., jnp.ndarray],
+                       shard_axes: Sequence[str] = ("data",)):
+    """Wrap a word-level predicate (planes... -> packed mask) for a
+    record-sharded relation. Output mask stays sharded like the input —
+    no collective at all for a pure filter, exactly the paper's "each
+    module computes its pages independently".
+    """
+    ax = tuple(shard_axes)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(None, ax), out_specs=P(ax),
+             check_rep=False)
+    def _run(planes):
+        return predicate_fn(planes)
+
+    return _run
+
+
+def distributed_filter_aggregate(mesh: Mesh,
+                                 program_fn: Callable[..., jnp.ndarray],
+                                 shard_axes: Sequence[str] = ("data",)):
+    """Filter + local aggregate + psum combine (paper §4.2: host combines
+    the per-crossbar reduce outputs; here the 'host combine' is one psum
+    over the record-sharding axes)."""
+    ax = tuple(shard_axes)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(None, ax), P(None, ax)), out_specs=P(),
+             check_rep=False)
+    def _run(filter_planes, agg_planes):
+        partial_val = program_fn(filter_planes, agg_planes)
+        for a in ax:
+            partial_val = jax.lax.psum(partial_val, a)
+        return partial_val
+
+    return _run
+
+
+def make_sum_where_program(imm_lo: int, imm_hi: int):
+    """Example program: SUM(agg) WHERE lo <= key < hi — the canonical
+    filter+aggregate kernel shape of the paper's full queries.
+
+    Returns per-bit popcount partials (int32, in-graph safe); the caller
+    weights them by 2^b in Python ints (the paper's host combine).
+    """
+
+    def program(filter_planes, agg_planes):
+        lt_lo, _ = eng.cmp_imm_planes(filter_planes, imm_lo)
+        lt_hi, _ = eng.cmp_imm_planes(filter_planes, imm_hi)
+        mask = ~lt_lo & lt_hi
+        return eng.reduce_sum_bits(agg_planes, mask)
+
+    return program

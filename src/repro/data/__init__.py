@@ -1,0 +1,2 @@
+"""Data pipeline (PIMDB-filtered example selection + token batcher)."""
+from .pipeline import CorpusMeta, PimDataSelector, TokenBatcher  # noqa: F401

@@ -1,0 +1,113 @@
+"""Training data pipeline — with PIMDB-powered example selection.
+
+This is where the paper's technique integrates with the LM stack
+(DESIGN.md §5): corpus-selection predicates (length / quality / domain /
+dedup-bucket filters) are scan-heavy analytics over a huge metadata table
+— exactly the workload PIMDB accelerates. The metadata table is bit-sliced
+once (the paper's offline DB copy) and every epoch's sampling predicate
+runs as a bulk-bitwise filter producing a packed admission bitmask; the
+token loader then draws only admitted examples.
+
+The token source here is synthetic (seeded PRNG) — the framework boundary
+is batch tensors, so swapping in a real tokenised corpus is a reader
+change only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core import bitslice, engine, isa
+from repro.db.compiler import And, Between, Cmp, Col, Compiler, InSet, Lit
+
+
+@dataclasses.dataclass
+class CorpusMeta:
+    """Per-example metadata columns (the PIM-resident selection table)."""
+    n_examples: int
+    length: np.ndarray          # tokens per example
+    quality: np.ndarray         # 0-100 quality score
+    domain: np.ndarray          # dict-encoded domain id
+    dedup_bucket: np.ndarray    # near-dup cluster id
+
+    @classmethod
+    def synthetic(cls, n: int, seed: int = 0) -> "CorpusMeta":
+        rng = np.random.default_rng(seed)
+        return cls(n,
+                   rng.integers(32, 8192, n),
+                   rng.integers(0, 101, n),
+                   rng.integers(0, 24, n),
+                   rng.integers(0, max(8, n // 4), n))
+
+
+def default_selection(min_len: int = 128, min_quality: int = 60,
+                      domains=(0, 1, 2, 3, 5, 8, 13)):
+    return And(Cmp("ge", Col("length"), Lit(min_len)),
+               Cmp("ge", Col("quality"), Lit(min_quality)),
+               InSet(Col("domain"), tuple(domains)))
+
+
+class PimDataSelector:
+    """Bit-sliced metadata table + bulk-bitwise admission filter."""
+
+    def __init__(self, meta: CorpusMeta):
+        self.meta = meta
+        self.rel = engine.PimRelation.from_columns("corpus", {
+            "length": meta.length, "quality": meta.quality,
+            "domain": meta.domain, "dedup_bucket": meta.dedup_bucket,
+        })
+
+    def admit(self, predicate=None) -> np.ndarray:
+        predicate = predicate or default_selection()
+        c = Compiler(self.rel)
+        mask_reg = c.compile_filter(predicate)
+        eng = engine.Engine(self.rel)
+        eng.run(c.program)
+        return eng.read_mask(mask_reg)[: self.meta.n_examples]
+
+    def admission_stats(self, predicate=None) -> Dict[str, float]:
+        m = self.admit(predicate)
+        return {"admitted": float(m.mean()), "n": int(m.sum())}
+
+
+class TokenBatcher:
+    """Deterministic, resumable batch stream over admitted examples.
+
+    Determinism + explicit epoch/offset state make restarts exact: the
+    loader state (epoch, cursor) is saved with the checkpoint, so a
+    restored run sees the same token stream a failure-free run would.
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int,
+                 admitted: Optional[np.ndarray] = None, seed: int = 0):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq
+        self.admitted = admitted
+        self.epoch = 0
+        self.cursor = 0
+        self.seed = seed
+
+    def state(self) -> Dict[str, int]:
+        return {"epoch": self.epoch, "cursor": self.cursor}
+
+    def load_state(self, st: Dict[str, int]):
+        self.epoch, self.cursor = st["epoch"], st["cursor"]
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed, self.epoch, self.cursor))
+        tokens = rng.integers(0, self.vocab, (self.batch, self.seq + 1),
+                              dtype=np.int32)
+        self.cursor += 1
+        if self.cursor >= 1 << 16:
+            self.cursor = 0
+            self.epoch += 1
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:],
+                "extra": None}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()

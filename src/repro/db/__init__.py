@@ -1,0 +1,3 @@
+"""Database substrate: TPC-H schema/generator, compiler, queries, runner."""
+from . import compiler, database, queries, schema, tpch  # noqa: F401
+from .database import PimDatabase, cost_report  # noqa: F401

@@ -1,0 +1,341 @@
+"""Query compiler: predicate/aggregate ASTs -> PIM instruction programs.
+
+The stand-in for the paper's in-house SQL compiler (§5.4): it receives the
+encoded relation layout and an expression tree, and emits the bit-serial
+instruction sequence a PIM controller executes. Immediates stay immediates
+(Algorithm 1), attribute widths come from the layout, derived values get
+fresh computation-area registers, and every filter program ends with the
+column-transform that re-orients the result bits for dense readout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import engine as eng
+from repro.core import isa
+
+
+# --------------------------------------------------------------------------
+# Expression AST
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Col:
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit:
+    value: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    op: str                     # eq ne lt le gt ge
+    left: "Expr"
+    right: Union["Expr", Lit]
+
+
+@dataclasses.dataclass(frozen=True)
+class Between:
+    col: "Expr"
+    lo: int
+    hi: int                     # inclusive
+
+
+@dataclasses.dataclass(frozen=True)
+class InSet:
+    col: "Expr"
+    values: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    p: "Pred"
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    ps: Tuple["Pred", ...]
+
+    def __init__(self, *ps):
+        object.__setattr__(self, "ps", tuple(ps))
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    ps: Tuple["Pred", ...]
+
+    def __init__(self, *ps):
+        object.__setattr__(self, "ps", tuple(ps))
+
+
+@dataclasses.dataclass(frozen=True)
+class Mul:
+    a: "Expr"
+    b: Union["Expr", Lit]
+
+
+@dataclasses.dataclass(frozen=True)
+class AddE:
+    a: "Expr"
+    b: Union["Expr", Lit]
+
+
+@dataclasses.dataclass(frozen=True)
+class RSubImm:
+    """imm - expr (e.g. (1 - discount) scaled -> 100 - l_discount)."""
+    imm: int
+    e: "Expr"
+
+
+Expr = Union[Col, Mul, AddE, RSubImm]
+Pred = Union[Cmp, Between, InSet, Not, And, Or]
+
+
+@dataclasses.dataclass(frozen=True)
+class Agg:
+    op: str                     # sum count min max avg
+    expr: Optional[Expr] = None
+    name: str = ""
+
+
+# --------------------------------------------------------------------------
+# Compiler
+# --------------------------------------------------------------------------
+class Compiler:
+    def __init__(self, relation: eng.PimRelation):
+        self.rel = relation
+        self._ids = itertools.count()
+        self.program: List[isa.PimInstruction] = []
+        self._expr_cache: Dict[Expr, Tuple[str, int]] = {}
+
+    def fresh(self, prefix: str) -> str:
+        return f"{prefix}{next(self._ids)}"
+
+    # -- expressions --------------------------------------------------------
+    def compile_expr(self, e: Expr) -> Tuple[str, int]:
+        """Returns (register/attr name, width in bits)."""
+        if isinstance(e, Col):
+            return e.name, self.rel.width_of(e.name)
+        if e in self._expr_cache:
+            return self._expr_cache[e]
+        if isinstance(e, Mul):
+            a, wa = self.compile_expr(e.a)
+            if isinstance(e.b, Lit):
+                wb = max(1, int(e.b.value).bit_length())
+                dest = self.fresh("t")
+                self.program.append(isa.Multiply(
+                    dest=dest, attr_a=a, imm=e.b.value,
+                    n_bits=wa + wb, m_bits=wb))
+            else:
+                b, wb = self.compile_expr(e.b)
+                dest = self.fresh("t")
+                self.program.append(isa.Multiply(
+                    dest=dest, attr_a=a, attr_b=b, n_bits=wa + wb, m_bits=wb))
+            out = (dest, wa + wb)
+        elif isinstance(e, AddE):
+            a, wa = self.compile_expr(e.a)
+            if isinstance(e.b, Lit):
+                wb = max(1, int(e.b.value).bit_length())
+                dest = self.fresh("t")
+                self.program.append(isa.AddImm(
+                    dest=dest, attr=a, imm=e.b.value, n_bits=max(wa, wb) + 1))
+            else:
+                b, wb = self.compile_expr(e.b)
+                dest = self.fresh("t")
+                self.program.append(isa.Add(
+                    dest=dest, attr_a=a, attr_b=b, n_bits=max(wa, wb) + 1))
+            out = (dest, max(wa, wb) + 1)
+        elif isinstance(e, RSubImm):
+            # imm - a  ==  (~a + imm + 1) mod 2^w, exact while a <= imm.
+            a, wa = self.compile_expr(e.e)
+            w = max(wa, int(e.imm).bit_length())
+            neg = self.fresh("t")
+            self.program.append(isa.BitwiseNot(dest=neg, src=a, n_bits=w))
+            dest = self.fresh("t")
+            self.program.append(isa.AddImm(
+                dest=dest, attr=neg, imm=e.imm + 1, n_bits=w))
+            out = (dest, w)
+        else:
+            raise TypeError(e)
+        self._expr_cache[e] = out
+        return out
+
+    # -- predicates ----------------------------------------------------------
+    def compile_pred(self, p: Pred) -> str:
+        """Returns the mask register holding the predicate result."""
+        if isinstance(p, Cmp):
+            return self._compile_cmp(p)
+        if isinstance(p, Between):
+            a, w = self.compile_expr(p.col)
+            m_lo = self.fresh("m")
+            self.program.append(isa.GreaterThanImm(
+                dest=m_lo, attr=a, imm=p.lo, n_bits=w, or_equal=True))
+            m_hi = self.fresh("m")
+            self.program.append(isa.LessThanImm(
+                dest=m_hi, attr=a, imm=p.hi, n_bits=w, or_equal=True))
+            m = self.fresh("m")
+            self.program.append(isa.BitwiseAnd(dest=m, src_a=m_lo, src_b=m_hi))
+            return m
+        if isinstance(p, InSet):
+            a, w = self.compile_expr(p.col)
+            acc = None
+            for v in p.values:
+                m = self.fresh("m")
+                self.program.append(isa.EqualImm(dest=m, attr=a, imm=v, n_bits=w))
+                if acc is None:
+                    acc = m
+                else:
+                    nxt = self.fresh("m")
+                    self.program.append(isa.BitwiseOr(dest=nxt, src_a=acc, src_b=m))
+                    acc = nxt
+            return acc
+        if isinstance(p, Not):
+            m = self.compile_pred(p.p)
+            out = self.fresh("m")
+            self.program.append(isa.BitwiseNot(dest=out, src=m, n_bits=1))
+            return out
+        if isinstance(p, And):
+            return self._fold(p.ps, isa.BitwiseAnd)
+        if isinstance(p, Or):
+            return self._fold(p.ps, isa.BitwiseOr)
+        raise TypeError(p)
+
+    def _fold(self, ps, op_cls) -> str:
+        acc = self.compile_pred(ps[0])
+        for q in ps[1:]:
+            m = self.compile_pred(q)
+            nxt = self.fresh("m")
+            self.program.append(op_cls(dest=nxt, src_a=acc, src_b=m))
+            acc = nxt
+        return acc
+
+    def _compile_cmp(self, p: Cmp) -> str:
+        a, wa = self.compile_expr(p.left)
+        dest = self.fresh("m")
+        if isinstance(p.right, Lit):
+            v = int(p.right.value)
+            if v >= (1 << wa) and p.op in ("eq", "ne"):
+                # Immediate unrepresentable in the attribute width: the
+                # comparison is constant (guards dict-id typos too).
+                self.program.append(isa.SetReset(
+                    dest=dest, value=int(p.op == "ne")))
+                return dest
+            if p.op == "eq":
+                self.program.append(isa.EqualImm(dest=dest, attr=a, imm=v, n_bits=wa))
+            elif p.op == "ne":
+                self.program.append(isa.NotEqualImm(dest=dest, attr=a, imm=v, n_bits=wa))
+            elif p.op in ("lt", "le"):
+                self.program.append(isa.LessThanImm(
+                    dest=dest, attr=a, imm=v, n_bits=wa, or_equal=p.op == "le"))
+            elif p.op in ("gt", "ge"):
+                self.program.append(isa.GreaterThanImm(
+                    dest=dest, attr=a, imm=v, n_bits=wa, or_equal=p.op == "ge"))
+            else:
+                raise ValueError(p.op)
+        else:
+            b, wb = self.compile_expr(p.right)
+            w = max(wa, wb)
+            if p.op == "eq":
+                self.program.append(isa.Equal(dest=dest, attr_a=a, attr_b=b, n_bits=w))
+            elif p.op == "ne":
+                tmp = self.fresh("m")
+                self.program.append(isa.Equal(dest=tmp, attr_a=a, attr_b=b, n_bits=w))
+                self.program.append(isa.BitwiseNot(dest=dest, src=tmp, n_bits=1))
+            elif p.op in ("lt", "le"):
+                self.program.append(isa.LessThan(
+                    dest=dest, attr_a=a, attr_b=b, n_bits=w, or_equal=p.op == "le"))
+            elif p.op in ("gt", "ge"):
+                self.program.append(isa.LessThan(
+                    dest=dest, attr_a=b, attr_b=a, n_bits=w, or_equal=p.op == "ge"))
+            else:
+                raise ValueError(p.op)
+        return dest
+
+    # -- top level -----------------------------------------------------------
+    def compile_filter(self, pred: Pred, with_transform: bool = True) -> str:
+        """Filter program: predicate AND valid, then column-transform so the
+        host can read the result densely (paper filter-only path)."""
+        m = self.compile_pred(pred)
+        out = self.fresh("m")
+        self.program.append(isa.BitwiseAnd(dest=out, src_a=m, src_b="__valid__"))
+        if with_transform:
+            final = self.fresh("m")
+            self.program.append(isa.ColumnTransform(dest=final, mask=out))
+            return final
+        return out
+
+    def compile_aggregates(self, mask: str, aggs: Sequence[Agg]) -> Dict[str, Tuple[str, str]]:
+        """Aggregate program on a filter mask (paper full-query path).
+
+        Returns {agg name: (kind, register)} where kind is 'scalar' or
+        'avg_pair' (avg = host division of sum/count, §4.2).
+        """
+        out: Dict[str, Tuple[str, str]] = {}
+        for agg in aggs:
+            name = agg.name or self.fresh("agg")
+            if agg.op == "count":
+                dest = self.fresh("r")
+                self.program.append(isa.ReduceSum(
+                    dest=dest, attr=mask, mask=mask, n_bits=1))
+                out[name] = ("scalar", dest)
+            elif agg.op in ("sum", "avg"):
+                a, w = self.compile_expr(agg.expr)
+                dest = self.fresh("r")
+                self.program.append(isa.ReduceSum(
+                    dest=dest, attr=a, mask=mask, n_bits=w))
+                if agg.op == "avg":
+                    cnt = self.fresh("r")
+                    self.program.append(isa.ReduceSum(
+                        dest=cnt, attr=mask, mask=mask, n_bits=1))
+                    out[name] = ("avg_pair", f"{dest}/{cnt}")
+                else:
+                    out[name] = ("scalar", dest)
+            elif agg.op in ("min", "max"):
+                a, w = self.compile_expr(agg.expr)
+                dest = self.fresh("r")
+                self.program.append(isa.ReduceMinMax(
+                    dest=dest, attr=a, mask=mask, n_bits=w,
+                    is_max=agg.op == "max"))
+                out[name] = ("scalar", dest)
+            else:
+                raise ValueError(agg.op)
+        return out
+
+
+def predicate_attrs(p: Pred) -> List[str]:
+    """Attributes a predicate touches (for the baseline traffic model)."""
+    cols: List[str] = []
+
+    def walk_e(e):
+        if isinstance(e, Col):
+            cols.append(e.name)
+        elif isinstance(e, (Mul, AddE)):
+            walk_e(e.a)
+            if not isinstance(e.b, Lit):
+                walk_e(e.b)
+        elif isinstance(e, RSubImm):
+            walk_e(e.e)
+
+    def walk_p(q):
+        if isinstance(q, Cmp):
+            walk_e(q.left)
+            if not isinstance(q.right, Lit):
+                walk_e(q.right)
+        elif isinstance(q, (Between, InSet)):
+            walk_e(q.col)
+        elif isinstance(q, Not):
+            walk_p(q.p)
+        elif isinstance(q, (And, Or)):
+            for s in q.ps:
+                walk_p(s)
+
+    walk_p(p)
+    seen, out = set(), []
+    for c in cols:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out

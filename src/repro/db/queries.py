@@ -1,0 +1,271 @@
+"""The paper's evaluated TPC-H query set (Table 2).
+
+Full queries (filter + aggregate entirely in PIM): Q1, Q6, Q22_sub.
+Filter-only queries (PIM filters; the rest of the query runs on the host
+and is out of scope, exactly as in the paper): Q2-Q5, Q7, Q8, Q10-Q12,
+Q14-Q17, Q19-Q21. Q9/Q13/Q18 filter only non-PIM text attributes and are
+not evaluated (paper §5.1).
+
+Predicates use the TPC-H validation parameters. Every value is already
+PIM-encoded (dict ids, scaled cents, day offsets) via `schema.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import schema as S
+from .compiler import (Agg, AddE, And, Between, Cmp, Col, InSet, Lit, Mul,
+                       Not, Or, RSubImm)
+
+D = S.date_to_days
+NK = S.NATION_KEY
+
+
+@dataclasses.dataclass
+class QuerySpec:
+    name: str
+    kind: str                                 # "full" | "filter"
+    filters: Dict[str, object]                # relation -> Pred
+    agg_relation: Optional[str] = None
+    aggregates: Sequence[Agg] = ()
+    groups: Optional[List[Tuple[str, object]]] = None   # (label, Pred)
+
+
+def _q1() -> QuerySpec:
+    cutoff = D("1998-12-01") - 90
+    disc_price = Mul(Col("l_extendedprice"), RSubImm(100, Col("l_discount")))
+    charge = Mul(disc_price, AddE(Col("l_tax"), Lit(100)))
+    groups = []
+    for irf, rf in enumerate(S.RETURNFLAGS):
+        for ils, ls in enumerate(S.LINESTATUS):
+            groups.append((f"{rf}/{ls}", And(
+                Cmp("eq", Col("l_returnflag"), Lit(irf)),
+                Cmp("eq", Col("l_linestatus"), Lit(ils)))))
+    return QuerySpec(
+        "Q1", "full",
+        filters={"lineitem": Cmp("le", Col("l_shipdate"), Lit(cutoff))},
+        agg_relation="lineitem",
+        aggregates=[
+            Agg("sum", Col("l_quantity"), "sum_qty"),
+            Agg("sum", Col("l_extendedprice"), "sum_base_price"),
+            Agg("sum", disc_price, "sum_disc_price"),
+            Agg("sum", charge, "sum_charge"),
+            Agg("avg", Col("l_quantity"), "avg_qty"),
+            Agg("avg", Col("l_discount"), "avg_disc"),
+            Agg("count", None, "count_order"),
+        ],
+        groups=groups)
+
+
+def _q6() -> QuerySpec:
+    return QuerySpec(
+        "Q6", "full",
+        filters={"lineitem": And(
+            Cmp("ge", Col("l_shipdate"), Lit(D("1994-01-01"))),
+            Cmp("lt", Col("l_shipdate"), Lit(D("1995-01-01"))),
+            Between(Col("l_discount"), 5, 7),
+            Cmp("lt", Col("l_quantity"), Lit(24)))},
+        agg_relation="lineitem",
+        aggregates=[Agg("sum", Mul(Col("l_extendedprice"), Col("l_discount")),
+                        "revenue")])
+
+
+def _q22() -> QuerySpec:
+    ccs = (13, 31, 23, 29, 30, 18, 17)
+    return QuerySpec(
+        "Q22_sub", "full",
+        filters={"customer": And(
+            Cmp("gt", Col("c_acctbal"), Lit(S.ACCTBAL_OFFSET)),  # > 0.00
+            InSet(Col("c_phone_cc"), ccs))},
+        agg_relation="customer",
+        aggregates=[Agg("avg", Col("c_acctbal"), "avg_acctbal")])
+
+
+def _filter_only() -> List[QuerySpec]:
+    qs: List[QuerySpec] = []
+    qs.append(QuerySpec("Q2", "filter", {
+        "part": And(Cmp("eq", Col("p_size"), Lit(15)),
+                    Cmp("eq", Col("p_type_syl3"),
+                        Lit(S.TYPE_SYL3.index("BRASS")))),
+        "supplier": InSet(Col("s_nationkey"),
+                          tuple(S.NATIONS_IN_REGION["EUROPE"])),
+    }))
+    qs.append(QuerySpec("Q3", "filter", {
+        "customer": Cmp("eq", Col("c_mktsegment"),
+                        Lit(S.SEGMENTS.index("BUILDING"))),
+        "orders": Cmp("lt", Col("o_orderdate"), Lit(D("1995-03-15"))),
+        "lineitem": Cmp("gt", Col("l_shipdate"), Lit(D("1995-03-15"))),
+    }))
+    qs.append(QuerySpec("Q4", "filter", {
+        "orders": And(Cmp("ge", Col("o_orderdate"), Lit(D("1993-07-01"))),
+                      Cmp("lt", Col("o_orderdate"), Lit(D("1993-10-01")))),
+        "lineitem": Cmp("lt", Col("l_commitdate"), Col("l_receiptdate")),
+    }))
+    qs.append(QuerySpec("Q5", "filter", {
+        "supplier": InSet(Col("s_nationkey"),
+                          tuple(S.NATIONS_IN_REGION["ASIA"])),
+        "customer": InSet(Col("c_nationkey"),
+                          tuple(S.NATIONS_IN_REGION["ASIA"])),
+        "orders": And(Cmp("ge", Col("o_orderdate"), Lit(D("1994-01-01"))),
+                      Cmp("lt", Col("o_orderdate"), Lit(D("1995-01-01")))),
+    }))
+    fr_de = (NK["FRANCE"], NK["GERMANY"])
+    qs.append(QuerySpec("Q7", "filter", {
+        "supplier": InSet(Col("s_nationkey"), fr_de),
+        "customer": InSet(Col("c_nationkey"), fr_de),
+        "lineitem": Between(Col("l_shipdate"), D("1995-01-01"), D("1996-12-31")),
+    }))
+    qs.append(QuerySpec("Q8", "filter", {
+        "part": Cmp("eq", Col("p_type"),
+                    Lit(S.type_name_to_id("ECONOMY ANODIZED STEEL"))),
+        "orders": Between(Col("o_orderdate"), D("1995-01-01"), D("1996-12-31")),
+        "customer": InSet(Col("c_nationkey"),
+                          tuple(S.NATIONS_IN_REGION["AMERICA"])),
+    }))
+    qs.append(QuerySpec("Q10", "filter", {
+        "orders": And(Cmp("ge", Col("o_orderdate"), Lit(D("1993-10-01"))),
+                      Cmp("lt", Col("o_orderdate"), Lit(D("1994-01-01")))),
+        "lineitem": Cmp("eq", Col("l_returnflag"),
+                        Lit(S.RETURNFLAGS.index("R"))),
+    }))
+    qs.append(QuerySpec("Q11", "filter", {
+        "supplier": Cmp("eq", Col("s_nationkey"), Lit(NK["GERMANY"])),
+    }))
+    qs.append(QuerySpec("Q12", "filter", {
+        "lineitem": And(
+            InSet(Col("l_shipmode"), (S.SHIPMODES.index("MAIL"),
+                                      S.SHIPMODES.index("SHIP"))),
+            Cmp("lt", Col("l_commitdate"), Col("l_receiptdate")),
+            Cmp("lt", Col("l_shipdate"), Col("l_commitdate")),
+            Cmp("ge", Col("l_receiptdate"), Lit(D("1994-01-01"))),
+            Cmp("lt", Col("l_receiptdate"), Lit(D("1995-01-01")))),
+    }))
+    qs.append(QuerySpec("Q14", "filter", {
+        "lineitem": And(Cmp("ge", Col("l_shipdate"), Lit(D("1995-09-01"))),
+                        Cmp("lt", Col("l_shipdate"), Lit(D("1995-10-01")))),
+    }))
+    qs.append(QuerySpec("Q15", "filter", {
+        "lineitem": And(Cmp("ge", Col("l_shipdate"), Lit(D("1996-01-01"))),
+                        Cmp("lt", Col("l_shipdate"), Lit(D("1996-04-01")))),
+    }))
+    qs.append(QuerySpec("Q16", "filter", {
+        "part": And(Cmp("ne", Col("p_brand"), Lit(S.brand_name_to_id("Brand#45"))),
+                    Not(Cmp("eq", Col("p_type_syl12"),
+                            Lit(S.TYPE_SYL1.index("MEDIUM") * len(S.TYPE_SYL2)
+                                + S.TYPE_SYL2.index("POLISHED")))),
+                    InSet(Col("p_size"), (49, 14, 23, 45, 19, 3, 36, 9))),
+    }))
+    qs.append(QuerySpec("Q17", "filter", {
+        "part": And(Cmp("eq", Col("p_brand"), Lit(S.brand_name_to_id("Brand#23"))),
+                    Cmp("eq", Col("p_container"),
+                        Lit(S.container_name_to_id("MED BOX")))),
+    }))
+    air = (S.SHIPMODES.index("AIR"), S.SHIPMODES.index("REG AIR"))
+    deliver = S.SHIPINSTRUCT.index("DELIVER IN PERSON")
+    qs.append(QuerySpec("Q19", "filter", {
+        "part": Or(
+            And(Cmp("eq", Col("p_brand"), Lit(S.brand_name_to_id("Brand#12"))),
+                InSet(Col("p_container"),
+                      tuple(S.container_name_to_id(c) for c in
+                            ("SM CASE", "SM BOX", "SM PACK", "SM PKG"))),
+                Between(Col("p_size"), 1, 5)),
+            And(Cmp("eq", Col("p_brand"), Lit(S.brand_name_to_id("Brand#23"))),
+                InSet(Col("p_container"),
+                      tuple(S.container_name_to_id(c) for c in
+                            ("MED BAG", "MED BOX", "MED PKG", "MED PACK"))),
+                Between(Col("p_size"), 1, 10)),
+            And(Cmp("eq", Col("p_brand"), Lit(S.brand_name_to_id("Brand#34"))),
+                InSet(Col("p_container"),
+                      tuple(S.container_name_to_id(c) for c in
+                            ("LG CASE", "LG BOX", "LG PACK", "LG PKG"))),
+                Between(Col("p_size"), 1, 15))),
+        "lineitem": And(InSet(Col("l_shipmode"), air),
+                        Cmp("eq", Col("l_shipinstruct"), Lit(deliver)),
+                        Between(Col("l_quantity"), 1, 30)),
+    }))
+    qs.append(QuerySpec("Q20", "filter", {
+        "supplier": Cmp("eq", Col("s_nationkey"), Lit(NK["CANADA"])),
+        "lineitem": And(Cmp("ge", Col("l_shipdate"), Lit(D("1994-01-01"))),
+                        Cmp("lt", Col("l_shipdate"), Lit(D("1995-01-01")))),
+    }))
+    qs.append(QuerySpec("Q21", "filter", {
+        "supplier": Cmp("eq", Col("s_nationkey"), Lit(NK["SAUDI ARABIA"])),
+        "orders": Cmp("eq", Col("o_orderstatus"),
+                      Lit(S.ORDERSTATUS.index("F"))),
+        "lineitem": Cmp("gt", Col("l_receiptdate"), Col("l_commitdate")),
+    }))
+    return qs
+
+
+def all_queries() -> List[QuerySpec]:
+    return [_q1(), _q6(), _q22()] + _filter_only()
+
+
+def get_query(name: str) -> QuerySpec:
+    for q in all_queries():
+        if q.name == name:
+            return q
+    raise KeyError(name)
+
+
+# --------------------------------------------------------------------------
+# Numpy oracle (doubles as the in-memory column-store baseline semantics)
+# --------------------------------------------------------------------------
+def eval_expr(cols: Dict[str, np.ndarray], e) -> np.ndarray:
+    if isinstance(e, Col):
+        return cols[e.name].astype(np.int64)
+    if isinstance(e, Lit):
+        return np.int64(e.value)
+    if isinstance(e, Mul):
+        return eval_expr(cols, e.a) * eval_expr(cols, e.b)
+    if isinstance(e, AddE):
+        return eval_expr(cols, e.a) + eval_expr(cols, e.b)
+    if isinstance(e, RSubImm):
+        return np.int64(e.imm) - eval_expr(cols, e.e)
+    raise TypeError(e)
+
+
+def eval_pred(cols: Dict[str, np.ndarray], p) -> np.ndarray:
+    if isinstance(p, Cmp):
+        a = eval_expr(cols, p.left)
+        b = (np.int64(p.right.value) if isinstance(p.right, Lit)
+             else eval_expr(cols, p.right))
+        return {"eq": a == b, "ne": a != b, "lt": a < b, "le": a <= b,
+                "gt": a > b, "ge": a >= b}[p.op]
+    if isinstance(p, Between):
+        a = eval_expr(cols, p.col)
+        return (a >= p.lo) & (a <= p.hi)
+    if isinstance(p, InSet):
+        a = eval_expr(cols, p.col)
+        return np.isin(a, np.asarray(p.values, np.int64))
+    if isinstance(p, Not):
+        return ~eval_pred(cols, p.p)
+    if isinstance(p, And):
+        out = eval_pred(cols, p.ps[0])
+        for q in p.ps[1:]:
+            out = out & eval_pred(cols, q)
+        return out
+    if isinstance(p, Or):
+        out = eval_pred(cols, p.ps[0])
+        for q in p.ps[1:]:
+            out = out | eval_pred(cols, q)
+        return out
+    raise TypeError(p)
+
+
+def eval_aggregate(cols: Dict[str, np.ndarray], mask: np.ndarray, agg: Agg):
+    if agg.op == "count":
+        return int(mask.sum())
+    vals = eval_expr(cols, agg.expr)[mask]
+    if agg.op == "sum":
+        return int(vals.sum())
+    if agg.op == "avg":
+        return (int(vals.sum()), int(mask.sum()))
+    if agg.op == "min":
+        return int(vals.min()) if vals.size else None
+    if agg.op == "max":
+        return int(vals.max()) if vals.size else None
+    raise ValueError(agg.op)

@@ -1,0 +1,2 @@
+"""Distribution: sharding rules, gradient compression, pipeline parallel."""
+from .sharding import ShardingRules, dp_axes  # noqa: F401

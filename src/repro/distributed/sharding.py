@@ -1,0 +1,195 @@
+"""Sharding rules: param/activation PartitionSpecs for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+"pod" folds into the data-parallel dimension everywhere (gradients psum
+over ("pod","data")).
+
+Parallelism mapping (DESIGN.md §6):
+  DP    batch over dp axes
+  TP    heads / d_ff / vocab / d_inner over "model" (Megatron col->row
+        pairs; one reduction point per block)
+  EP    MoE experts over "model"
+  SP    long-context decode: KV-cache sequence over "model" (+ "data" when
+        batch=1) — flash-decoding-style distributed softmax via GSPMD
+  FSDP  optional: shard the layer-stacked dim of big weights over "data"
+        (ZeRO-3-ish; XLA all-gathers per scan step)
+
+Every rule checks divisibility (jit rejects uneven shards); fallbacks
+replicate and the roofline then shows the redundant compute honestly —
+that surface is exactly what §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    return n % _size(mesh, axes) == 0
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, cfg, fsdp: Optional[bool] = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.dp = dp_axes(mesh)
+        self.tp = "model"
+        self.fsdp = cfg.fsdp if fsdp is None else fsdp
+
+    # ---- helpers ----
+    def ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def _heads_shardable(self) -> bool:
+        cfg, m = self.cfg, self.mesh
+        nh = getattr(cfg, "eff_n_heads", cfg.n_heads)
+        nkv = getattr(cfg, "eff_n_kv_heads", cfg.n_kv_heads)
+        return _div(nh, m, self.tp) and _div(nkv, m, self.tp)
+
+    # ---- parameter specs ----
+    def param_spec(self, path: str, leaf) -> P:
+        """path: '/'-joined key path; leaf shapes may carry a leading
+        layer-stack dim (detected as ndim one larger than the rule's)."""
+        cfg, m, tp = self.cfg, self.mesh, self.tp
+        name = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+        nd = leaf.ndim
+        stacked = any(s in path for s in
+                      ("blocks", "mlstm", "slstm", "mamba", "tail")) \
+            and "shared_attn" not in path
+        L = (None,) if stacked else ()
+
+        def with_stack(*dims):
+            return P(*(L + tuple(dims)))
+
+        # --- embeddings / lm head ---
+        if name == "table":
+            if _div(leaf.shape[-2], m, tp):
+                return P(tp, None)
+            return P(None, None)
+        if name in ("enc_pos", "dec_pos"):
+            return P(None, None)
+
+        # --- attention ---
+        if parent in ("attn", "xattn"):
+            hs = self._heads_shardable()
+            if name == "wq" or name == "wk" or name == "wv":
+                return with_stack(None, tp if hs else None, None)
+            if name == "wo":
+                return with_stack(tp if hs else None, None, None)
+            if name in ("bq", "bk", "bv"):
+                return with_stack(tp if hs else None, None)
+
+        # --- MoE ---
+        if name == "router":
+            return with_stack(None, tp if _div(leaf.shape[-1], m, tp) else None)
+        if parent == "moe" and not getattr(cfg, "moe_ep", True) \
+                and name in ("w_gate", "w_up", "w_down"):
+            return with_stack(None, None, None)   # replicated; fsdp shards
+        if parent == "moe" and name in ("w_gate", "w_up"):
+            if _div(leaf.shape[-3], m, tp):
+                return with_stack(tp, None, None)
+            return with_stack(None, None, tp if _div(leaf.shape[-1], m, tp) else None)
+        if parent == "moe" and name == "w_down":
+            if _div(leaf.shape[-3], m, tp):
+                return with_stack(tp, None, None)
+            return with_stack(None, tp if _div(leaf.shape[-2], m, tp) else None, None)
+
+        # --- dense MLP / shared expert / mLSTM projections ---
+        if name in ("w_gate", "w_up", "w_in", "w_q", "w_k", "w_v", "w_o",
+                    "w_z", "w_x"):
+            if _div(leaf.shape[-1], m, tp):
+                return with_stack(None, tp)
+            return with_stack(None, None)
+        if name == "w_down":
+            if _div(leaf.shape[-2], m, tp):
+                return with_stack(tp, None)
+            return with_stack(None, None)
+        if name == "out_proj":
+            if _div(leaf.shape[-2], m, tp):
+                return with_stack(tp, None)
+            return with_stack(None, None)
+
+        # --- SSM small projections / per-head params ---
+        if name in ("w_B", "w_C", "w_dt"):
+            return with_stack(None, None)
+        if name in ("A_log", "dt_bias", "D"):
+            return with_stack(tp if _div(leaf.shape[-1], m, tp) else None)
+        if name in ("conv_w", "conv_b", "norm_scale"):
+            if _div(leaf.shape[-1], m, tp):
+                return with_stack(*((None,) * (nd - len(L) - 1) + (tp,)))
+            return with_stack(*((None,) * (nd - len(L))))
+
+        # --- everything else (norms, gates, biases, slstm r) ---
+        return with_stack(*((None,) * (nd - len(L))))
+
+    def params_shardings(self, params_struct) -> Any:
+        paths_specs = []
+
+        def walk(node, path):
+            if isinstance(node, dict):
+                return {k: walk(v, f"{path}/{k}" if path else k)
+                        for k, v in node.items()}
+            if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+                t = [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+                return type(node)(t) if not hasattr(node, "_fields") \
+                    else type(node)(*t)
+            if node is None:
+                return None
+            return self.ns(self.param_spec(path, node))
+
+        return walk(params_struct, "")
+
+    # ---- batch / cache specs ----
+    def batch_spec(self, batch_size: int, rank: int) -> P:
+        if batch_size % _size(self.mesh, self.dp) == 0:
+            return P(self.dp, *(None,) * (rank - 1))
+        return P(*(None,) * rank)
+
+    def kv_cache_spec(self, shape) -> P:
+        """(L, B, T, nkv, hd): batch over dp when divisible else seq over
+        dp; seq additionally over 'model' (SP / flash-decoding split)."""
+        L_, B, T, nkv, hd = shape
+        dp_ok = B % _size(self.mesh, self.dp) == 0
+        tp_seq_ok = (T % _size(self.mesh, self.tp) == 0) and T > 8192
+        if dp_ok:
+            return P(None, self.dp, self.tp if tp_seq_ok else None, None, None)
+        if T % _size(self.mesh, self.dp + (self.tp,)) == 0:
+            return P(None, None, self.dp + (self.tp,), None, None)
+        return P(None, None, None, None, None)
+
+    def state_spec(self, shape) -> P:
+        """SSM/xLSTM decode states (L, B, H, ...) or (L, B, ...)."""
+        B = shape[1]
+        dp_ok = B % _size(self.mesh, self.dp) == 0
+        specs = [None, self.dp if dp_ok else None]
+        for d in shape[2:]:
+            if d % _size(self.mesh, self.tp) == 0 and self.tp not in specs:
+                specs.append(self.tp)
+            else:
+                specs.append(None)
+        return P(*specs)
+
+    def cache_shardings(self, cache_struct) -> Any:
+        def leaf_spec(leaf):
+            if leaf is None:
+                return None
+            if leaf.ndim == 5:
+                return self.ns(self.kv_cache_spec(leaf.shape))
+            return self.ns(self.state_spec(leaf.shape))
+        return jax.tree.map(leaf_spec, cache_struct)

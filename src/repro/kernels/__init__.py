@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the bulk-bitwise hot loops (+ refs in ref.py)."""
+from . import bitpack, bitwise_filter, filter_aggregate, ops, ref  # noqa: F401

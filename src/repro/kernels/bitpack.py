@@ -1,0 +1,68 @@
+"""Bit pack/unpack Pallas kernels — the column-transform analogue (Fig. 6).
+
+The paper's column-transform re-orients a crossbar column of result bits
+into rows so the host can read them densely (16 bits per crossbar read
+instead of 1). Here the equivalent transform packs a one-value-per-record
+vector into uint32 words (32x denser readout) and back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+BLOCK_W = 512   # words per grid step -> (BLOCK_W, 32) uint32 tile in VMEM
+
+
+def _pick_block(w: int, requested: int) -> int:
+    """Largest power-of-two block <= requested that divides w (w is always a
+    multiple of 1024 by the bitslice layout contract)."""
+    b = min(requested, w)
+    while w % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _pack_kernel(bits_ref, out_ref):
+    shifts = jax.lax.broadcasted_iota(U32, bits_ref.shape, 1)
+    out_ref[...] = jnp.sum(bits_ref[...].astype(U32) << shifts, axis=1,
+                           dtype=U32)
+
+
+def bitpack(bits: jax.Array, *, block_w: int = BLOCK_W,
+            interpret: bool = False) -> jax.Array:
+    """(W, 32) uint32 of 0/1 -> (W,) packed words (bit j <- column j)."""
+    w = bits.shape[0]
+    block_w = _pick_block(w, block_w)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_w, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_w,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), U32),
+        interpret=interpret,
+    )(bits)
+
+
+def _unpack_kernel(words_ref, out_ref):
+    shifts = jax.lax.broadcasted_iota(U32, out_ref.shape, 1)
+    out_ref[...] = (words_ref[...][:, None] >> shifts) & np.uint32(1)
+
+
+def bitunpack(words: jax.Array, *, block_w: int = BLOCK_W,
+              interpret: bool = False) -> jax.Array:
+    """(W,) uint32 -> (W, 32) uint32 of 0/1."""
+    w = words.shape[0]
+    block_w = _pick_block(w, block_w)
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_w,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_w, 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, 32), U32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+def popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    v = v.astype(U32)
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return (v * np.uint32(0x01010101)) >> 24
+
+
+def predicate_eq_imm(planes: jnp.ndarray, imm: int) -> jnp.ndarray:
+    acc = jnp.full(planes.shape[1:], _FULL, U32)
+    for b in range(planes.shape[0]):
+        acc = acc & (planes[b] if (imm >> b) & 1 else ~planes[b])
+    return acc
+
+
+def predicate_cmp_imm(planes: jnp.ndarray, imm: int):
+    lt = jnp.zeros(planes.shape[1:], U32)
+    eq = jnp.full(planes.shape[1:], _FULL, U32)
+    for b in range(planes.shape[0] - 1, -1, -1):
+        v = planes[b]
+        if (imm >> b) & 1:
+            lt = lt | (eq & ~v)
+            eq = eq & v
+        else:
+            eq = eq & ~v
+    return lt, eq
+
+
+def predicate_range(planes: jnp.ndarray, lo: int, hi: int) -> jnp.ndarray:
+    """lo <= v < hi."""
+    lt_lo, _ = predicate_cmp_imm(planes, lo)
+    lt_hi, _ = predicate_cmp_imm(planes, hi)
+    return ~lt_lo & lt_hi
+
+
+def filter_agg_popcounts(filter_planes: jnp.ndarray, agg_planes: jnp.ndarray,
+                         lo: int, hi: int, valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-bit masked popcounts for SUM(agg) WHERE lo<=key<hi.
+
+    Returns (n_agg_bits + 1,) int64: [count, pc(bit0), pc(bit1), ...] so
+    the caller forms count and sum exactly.
+    """
+    mask = predicate_range(filter_planes, lo, hi) & valid
+    outs = [jnp.sum(popcount_u32(mask).astype(jnp.int64))]
+    for b in range(agg_planes.shape[0]):
+        outs.append(jnp.sum(popcount_u32(mask & agg_planes[b]).astype(jnp.int64)))
+    return jnp.stack(outs)
+
+
+def bitpack(bools: jnp.ndarray) -> jnp.ndarray:
+    """(W, 32) uint32 of 0/1 -> (W,) packed uint32 (bit j from column j).
+
+    The column-transform analogue: per-record result bits re-oriented into
+    dense words for readout.
+    """
+    shifts = jnp.arange(32, dtype=U32)
+    return jnp.sum(bools.astype(U32) << shifts[None, :], axis=1, dtype=U32)
+
+
+def bitunpack(words: jnp.ndarray) -> jnp.ndarray:
+    """(W,) uint32 -> (W, 32) uint32 of 0/1."""
+    shifts = jnp.arange(32, dtype=U32)
+    return (words[:, None] >> shifts[None, :]) & np.uint32(1)

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For one (arch x shape x mesh) cell:
+  1. lower + compile the full-depth step on the production mesh —
+     memory_analysis() proves the footprint, cost_analysis() the FLOPs;
+  2. (single-pod only) lower 1-unit and 2-unit variants with sequence
+     scans statically unrolled, extrapolate per roofline.py, and emit the
+     three roofline terms.
+
+Results are cached as JSON under results/dryrun/ (reruns skip completed
+cells). Run everything via launch/run_all_dryruns.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multipod] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cell_is_runnable, get_config
+from repro.launch import roofline as R
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import scan_utils
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def cell_path(arch: str, shape: str, multipod: bool) -> pathlib.Path:
+    mesh_tag = "pod2x16x16" if multipod else "pod16x16"
+    return RESULTS / f"{arch}__{shape}__{mesh_tag}.json"
+
+
+def run_cell(arch: str, shape_name: str, multipod: bool,
+             rooflines: bool = True, seq_extrapolate: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multipod)
+    n_chips = mesh.devices.size
+    out = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multipod else "16x16", "status": "ok"}
+
+    runnable, why = cell_is_runnable(arch, shape_name)
+    if not runnable:
+        out["status"] = "skipped"
+        out["reason"] = why
+        return out
+
+    t0 = time.time()
+    with mesh:
+        bundle = steps_mod.build_step(cfg, shape, mesh)
+        lowered = bundle.fn.lower(*bundle.args)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    coll = R.collective_bytes(compiled.as_text())
+    bytes_per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes +
+                     ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    out["full_compile"] = {
+        "compile_s": round(time.time() - t0, 1),
+        "argument_bytes": ma.argument_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "bytes_per_device": int(bytes_per_dev),
+        "fits_16GB": bool(bytes_per_dev < 16e9),
+        "hlo_flops_per_dev_uncorrected": float(ca.get("flops", 0.0)),
+        "collectives_in_hlo": coll,
+    }
+    print(f"[{arch} {shape_name} {'multi' if multipod else 'single'}] "
+          f"compiled in {out['full_compile']['compile_s']}s, "
+          f"{bytes_per_dev/1e9:.2f} GB/device, fits={bytes_per_dev < 16e9}")
+
+    if rooflines and not multipod:
+        scan_utils.UNROLL_SCANS = True
+        scan_utils.FLASH_Q_BLOCK = 2048
+        scan_utils.FLASH_KV_BLOCK = 4096
+        try:
+            if seq_extrapolate:
+                # Heavy cells (SSD/mLSTM chunk scans at 32k unroll into
+                # ~1000 bodies -> hour-long 1-core compiles): lower each
+                # unit count at two smaller S and fit cost(S) = a*S + b*S^2
+                # (recurrent blocks are S-linear at fixed chunk; attention
+                # contributes the quadratic term). Documented in
+                # EXPERIMENTS.md §Methodology.
+                cs = []
+                s1, s2 = shape.seq_len // 8, shape.seq_len // 4
+                for u in (1, 2):
+                    cfg_u = R.with_units(cfg, u)
+                    pts = []
+                    for sl in (s1, s2):
+                        sh = dataclasses.replace(shape, seq_len=sl)
+                        with mesh:
+                            b = steps_mod.build_step(cfg_u, sh, mesh)
+                            comp = b.fn.lower(*b.args).compile()
+                        pts.append(R.costs_of(comp))
+                    cs.append(R.seq_fit(pts[0], pts[1], s1, s2,
+                                        shape.seq_len))
+                out["roofline_method"] = "seq_extrapolated"
+            else:
+                cs = []
+                for u in (1, 2):
+                    cfg_u = R.with_units(cfg, u)
+                    with mesh:
+                        b = steps_mod.build_step(cfg_u, shape, mesh)
+                        comp = b.fn.lower(*b.args).compile()
+                    cs.append(R.costs_of(comp))
+            total = R.extrapolate(cs[0], cs[1], cfg)
+            total.flops += R.slstm_flops_correction(cfg, shape, n_chips)
+            traffic = 2.0 * (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                             + ma.output_size_in_bytes)
+            rl = R.make_roofline(total, cfg, shape, n_chips,
+                                 traffic_bytes=traffic)
+            out["costs"] = {
+                "flops_per_dev": total.flops,
+                "logical_bytes_per_dev": total.bytes_accessed,
+                "traffic_bytes_per_dev": traffic,
+                "collective_bytes_per_dev": total.coll_bytes,
+            }
+            out["roofline"] = rl.row()
+        finally:
+            scan_utils.UNROLL_SCANS = False
+            scan_utils.FLASH_Q_BLOCK = None
+            scan_utils.FLASH_KV_BLOCK = None
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--seq-extrapolate", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="comma-separated cfg overrides k=v (hillclimb)")
+    ap.add_argument("--tag", default="", help="result filename suffix")
+    args = ap.parse_args()
+
+    path = cell_path(args.arch, args.shape, args.multipod)
+    if args.tag:
+        path = path.with_name(path.stem + "__" + args.tag + ".json")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if path.exists() and not args.force:
+        print(f"cached: {path}")
+        return
+
+    try:
+        overrides = {}
+        for kv in args.override.split(","):
+            if kv:
+                k, v = kv.split("=")
+                overrides[k] = (v == "True" if v in ("True", "False")
+                                else int(v) if v.isdigit() else float(v))
+        out = run_cell(args.arch, args.shape, args.multipod,
+                       rooflines=not args.no_roofline,
+                       seq_extrapolate=args.seq_extrapolate,
+                       overrides=overrides or None)
+    except Exception as e:
+        out = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multipod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+        print(out["error"])
+    path.write_text(json.dumps(out, indent=2, default=float))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Elastic scaling / failure recovery: re-mesh and re-shard a checkpoint.
+
+Scenario (DESIGN §6): a pod (or a host) is lost mid-run. The controller
+  1. rebuilds a mesh over the surviving device set
+     (`mesh.make_mesh_for_devices`),
+  2. recomputes sharding rules for the new mesh,
+  3. restores the newest complete checkpoint re-sliced onto the new mesh
+     (checkpoints store full-leaf arrays, so re-slicing is a device_put
+     with the new shardings),
+  4. resumes training with the global batch kept constant (per-device
+     batch grows; grad accumulation can re-split it if memory-bound).
+
+Straggler mitigation uses the same machinery: a persistently slow host is
+evicted (treated as failed) and the run re-meshes without it.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from ..checkpoint import checkpoint as ckpt
+from ..distributed.sharding import ShardingRules
+from . import steps as steps_mod
+from .mesh import make_mesh_for_devices
+
+
+def remesh_and_restore(ckpt_dir: str, cfg, shape, n_surviving: int,
+                       example_params, example_opt,
+                       model_parallel: Optional[int] = None
+                       ) -> Tuple[int, Any, Any, Any]:
+    """Returns (step, params, opt_state, new_mesh)."""
+    mesh = make_mesh_for_devices(n_surviving, model_parallel)
+    rules = ShardingRules(mesh, cfg)
+    p_shard = rules.params_shardings(example_params)
+    p_shard = steps_mod._fsdp_augment(rules, p_shard, example_params)
+    o_shard = steps_mod.opt_state_shardings(rules, p_shard, example_opt)
+    step, params = ckpt.restore(ckpt_dir, example_params, shardings=p_shard)
+    _, opt_state = ckpt.restore(ckpt_dir, example_opt, shardings=o_shard)
+    return step, params, opt_state, mesh

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+No device allocation ever happens here — the dry-run lowers directly from
+these structs (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.common import ModelConfig, ShapeConfig
+from ..models.lm import LM
+
+ENC_STUB_LEN = 4096   # whisper encoder stub length for decode shapes
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["extra"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == "audio_stub":
+        specs["extra"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["extra"] = None
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, ...]:
+    """(cache_struct, tokens, pos) for serve_step."""
+    model = LM(cfg)
+    B, T = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, T))
+    if cfg.block_pattern == "encdec":
+        frames = jax.ShapeDtypeStruct((B, ENC_STUB_LEN, cfg.d_model), jnp.bfloat16)
+        _, cross = jax.eval_shape(
+            lambda p, f: model.encode(p, f),
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), frames)
+        cache["cross"] = cross
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def params_struct(cfg: ModelConfig):
+    model = LM(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

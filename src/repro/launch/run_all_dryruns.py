@@ -1,0 +1,60 @@
+"""Sequential driver: every (arch x shape x mesh) cell as a subprocess
+(fresh process per cell: the 512-device XLA flag must be set pre-import,
+and compile memory is reclaimed). Caches via results/dryrun/*.json."""
+import itertools
+import pathlib
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from repro.configs import ARCH_IDS, SHAPES  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+# cells whose fully-unrolled chunk scans would take >1 h to compile on the
+# single-core CPU proxy; their rooflines use the documented S-fit method
+HEAVY = {("xlstm-1.3b", "prefill_32k"), ("zamba2-7b", "prefill_32k"),
+         ("zamba2-7b", "train_4k"), ("xlstm-1.3b", "train_4k")}
+
+# cheap archs first so the table fills early
+ORDER = ["qwen2-0.5b", "qwen1.5-0.5b", "whisper-small", "olmoe-1b-7b",
+         "xlstm-1.3b", "stablelm-3b", "paligemma-3b", "gemma2-9b",
+         "zamba2-7b", "llama4-maverick-400b-a17b"]
+
+
+def main():
+    cells = []
+    for arch in ORDER:
+        for shape in SHAPES:
+            cells.append((arch, shape, False))
+            cells.append((arch, shape, True))
+    t0 = time.time()
+    for i, (arch, shape, multi) in enumerate(cells):
+        tag = "pod2x16x16" if multi else "pod16x16"
+        out = ROOT / "results" / "dryrun" / f"{arch}__{shape}__{tag}.json"
+        if out.exists():
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape]
+        if multi:
+            cmd.append("--multipod")
+        if (arch, shape) in HEAVY:
+            cmd.append("--seq-extrapolate")
+        print(f"[{i+1}/{len(cells)} t={time.time()-t0:.0f}s] {arch} {shape} "
+              f"{'multi' if multi else 'single'}", flush=True)
+        try:
+            subprocess.run(cmd, cwd=ROOT, timeout=5400,
+                           env={**__import__('os').environ,
+                                "PYTHONPATH": str(ROOT / "src")})
+        except subprocess.TimeoutExpired:
+            out.write_text(
+                '{"arch": "%s", "shape": "%s", "status": "error", '
+                '"error": "compile timeout (>5400s on 1-core CPU proxy)"}'
+                % (arch, shape))
+            print("TIMEOUT", arch, shape, flush=True)
+    print("ALL CELLS DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

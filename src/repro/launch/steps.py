@@ -1,0 +1,265 @@
+"""Jit-able train/serve steps with explicit shardings (the pjit layer)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.common import ModelConfig, ShapeConfig
+from ..distributed.sharding import ShardingRules, dp_axes
+from ..models.lm import LM
+from ..optim import optimizers as opt
+from . import input_specs as ispec
+
+
+def _fsdp_augment(rules: ShardingRules, shardings, params_struct):
+    """When cfg.fsdp: add the dp axes to the largest free dim of every
+    big leaf (ZeRO-3-style weight sharding)."""
+    if not rules.fsdp:
+        return shardings
+    dpsz = 1
+    for a in rules.dp:
+        dpsz *= rules.mesh.shape[a]
+
+    def aug(ns, leaf):
+        if ns is None or leaf is None or leaf.size < (1 << 20):
+            return ns
+        spec = list(ns.spec) + [None] * (leaf.ndim - len(ns.spec))
+        used = {a for s in spec if s for a in
+                (s if isinstance(s, tuple) else (s,))}
+        if any(a in used for a in rules.dp):
+            return ns
+        # biggest unsharded dim divisible by dp size
+        cands = [(leaf.shape[i], i) for i in range(leaf.ndim)
+                 if spec[i] is None and leaf.shape[i] % dpsz == 0]
+        if not cands:
+            return ns
+        _, i = max(cands)
+        spec[i] = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree.map(aug, shardings, params_struct)
+
+
+def opt_state_shardings(rules: ShardingRules, params_shardings, opt_struct):
+    """Optimizer state mirrors parameter shardings where shapes match;
+    factored accumulators drop the reduced dim's spec."""
+    mesh = rules.mesh
+
+    def match(ns, st):
+        if not hasattr(st, "shape"):
+            return None
+        # step counter / scalars
+        if st.ndim == 0:
+            return NamedSharding(mesh, P())
+        return None
+
+    def walk(ps, ss):
+        # ss mirrors params tree (adam m/v) -> reuse; factored -> adapt
+        def leaf_fix(p_ns, s_leaf):
+            if s_leaf is None:
+                return None
+            if p_ns is None:
+                return NamedSharding(mesh, P(*(None,) * s_leaf.ndim))
+            spec = list(p_ns.spec) + [None] * 8
+            return NamedSharding(mesh, P(*spec[: s_leaf.ndim]))
+        return jax.tree.map(leaf_fix, ps, ss)
+
+    inner = opt_struct.inner
+    if hasattr(inner, "m"):          # AdamState mirrors params exactly
+        return opt.OptState(NamedSharding(mesh, P()),
+                            opt.AdamState(walk(params_shardings, inner.m),
+                                          walk(params_shardings, inner.v)))
+    # Adafactor: vr drops last dim, vc drops second-to-last
+
+    def drop_last(p_ns, s_leaf):
+        if s_leaf is None:
+            return None
+        if p_ns is None or s_leaf.ndim == 0:
+            return NamedSharding(mesh, P(*(None,) * s_leaf.ndim))
+        spec = list(p_ns.spec) + [None] * 8
+        return NamedSharding(mesh, P(*spec[: s_leaf.ndim]))
+
+    def drop_middle(p_ns, s_leaf):
+        if s_leaf is None:
+            return None
+        if p_ns is None or s_leaf.ndim == 0 or s_leaf.shape == (1,):
+            return NamedSharding(mesh, P(*(None,) * s_leaf.ndim))
+        spec = list(p_ns.spec) + [None] * 8
+        spec = spec[: max(0, s_leaf.ndim - 1)] + [spec[s_leaf.ndim]]
+        return NamedSharding(mesh, P(*spec[: s_leaf.ndim]))
+
+    return opt.OptState(
+        NamedSharding(mesh, P()),
+        opt.FactorState(jax.tree.map(drop_last, params_shardings, inner.vr),
+                        jax.tree.map(drop_middle, params_shardings, inner.vc)))
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    fn: Any                  # jitted function
+    args: Tuple[Any, ...]    # ShapeDtypeStruct args
+
+
+def make_sharder(rules: ShardingRules, cfg):
+    """Activation-sharding hook for LM: keeps logits vocab-sharded through
+    the loss (Megatron CE) and hidden states batch-sharded."""
+    mesh = rules.mesh
+    vocab_ok = cfg.vocab % mesh.shape["model"] == 0
+
+    moe_ok = (cfg.moe is not None and
+              cfg.moe.n_experts % mesh.shape["model"] == 0)
+
+    def sharder(x, kind):
+        if kind == "attn_heads":
+            b_ok = x.shape[0] % _dp_size(mesh, rules.dp) == 0
+            h_ok = x.shape[2] % mesh.shape["model"] == 0
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(rules.dp if b_ok else None, None,
+                                         "model" if h_ok else None, None)))
+        if kind == "moe_group":
+            all_ax = tuple(rules.dp) + ("model",)
+            n_ax = 1
+            for a in all_ax:
+                n_ax *= mesh.shape[a]
+            if x.shape[0] % n_ax == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(
+                        mesh, P(all_ax, *(None,) * (x.ndim - 1))))
+            return x
+        if kind == "moe_buf3":      # (B, E*C, d): batch over dp only
+            b_ok = x.shape[0] % _dp_size(mesh, rules.dp) == 0
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(rules.dp if b_ok else None,
+                                         None, None)))
+        if kind == "moe_buf":
+            if not getattr(cfg, "moe_ep", True):
+                # H1c: keep dispatch buffers token-sharded (dp x model on
+                # the group dim); expert weights get gathered instead.
+                all_ax = tuple(rules.dp) + ("model",)
+                n_ax = 1
+                for a in all_ax:
+                    n_ax *= mesh.shape[a]
+                if x.shape[0] % n_ax == 0:
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(
+                            mesh, P(all_ax, *(None,) * (x.ndim - 1))))
+                return x
+            b_ok = x.shape[0] % _dp_size(mesh, rules.dp) == 0
+            spec = P(rules.dp if b_ok else None,
+                     "model" if moe_ok else None, None, None)
+        elif kind == "logits":
+            b_ok = x.shape[0] % _dp_size(mesh, rules.dp) == 0
+            spec = P(rules.dp if b_ok else None, None,
+                     "model" if vocab_ok else None)
+        elif kind == "hidden":
+            b_ok = x.shape[0] % _dp_size(mesh, rules.dp) == 0
+            spec = P(rules.dp if b_ok else None, *(None,) * (x.ndim - 1))
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return sharder
+
+
+def _dp_size(mesh, dp):
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return n
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     grad_compression: bool = False) -> StepBundle:
+    rules = ShardingRules(mesh, cfg)
+    model = LM(cfg, sharder=make_sharder(rules, cfg))
+    init_fn, update_fn = opt.make_optimizer(cfg.optimizer)
+
+    p_struct = ispec.params_struct(cfg)
+    p_shard = rules.params_shardings(p_struct)
+    p_shard = _fsdp_augment(rules, p_shard, p_struct)
+    o_struct = jax.eval_shape(init_fn, p_struct)
+    o_shard = opt_state_shardings(rules, p_shard, o_struct)
+
+    batch = ispec.train_input_specs(cfg, shape)
+    dp = dp_axes(mesh)
+    b_shard = {
+        "tokens": NamedSharding(mesh, rules.batch_spec(shape.global_batch, 2)),
+        "labels": NamedSharding(mesh, rules.batch_spec(shape.global_batch, 2)),
+        "extra": (None if batch["extra"] is None else
+                  NamedSharding(mesh, rules.batch_spec(shape.global_batch, 3))),
+    }
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if grad_compression:
+            from ..distributed.compression import compress_tree
+            grads = compress_tree(grads)
+        grads, gnorm = opt.clip_by_global_norm(grads)
+        new_params, new_opt = update_fn(params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard,
+                       {"loss": NamedSharding(mesh, P()),
+                        "grad_norm": NamedSharding(mesh, P())}),
+        donate_argnums=(0, 1))
+    return StepBundle(fn, (p_struct, o_struct, batch))
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> StepBundle:
+    rules = ShardingRules(mesh, cfg)
+    model = LM(cfg, sharder=make_sharder(rules, cfg))
+    p_struct = ispec.params_struct(cfg)
+    p_shard = rules.params_shardings(p_struct)
+    p_shard = _fsdp_augment(rules, p_shard, p_struct)
+    cache, tokens, pos = ispec.decode_input_specs(cfg, shape)
+    c_shard = rules.cache_shardings(cache)
+    t_shard = NamedSharding(mesh, rules.batch_spec(shape.global_batch, 2))
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        return logits, new_cache
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, t_shard, NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, rules.batch_spec(shape.global_batch, 3)),
+                       c_shard),
+        donate_argnums=(1,))
+    return StepBundle(fn, (p_struct, cache, tokens,
+                           jax.ShapeDtypeStruct((), jnp.int32)))
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> StepBundle:
+    rules = ShardingRules(mesh, cfg)
+    model = LM(cfg, sharder=make_sharder(rules, cfg))
+    p_struct = ispec.params_struct(cfg)
+    p_shard = rules.params_shardings(p_struct)
+    p_shard = _fsdp_augment(rules, p_shard, p_struct)
+    batch = ispec.train_input_specs(cfg, shape)
+    t_shard = NamedSharding(mesh, rules.batch_spec(shape.global_batch, 2))
+    e_shard = (None if batch["extra"] is None else
+               NamedSharding(mesh, rules.batch_spec(shape.global_batch, 3)))
+
+    def prefill_step(params, tokens, extra):
+        return model.forward(params, tokens, extra)
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(p_shard, t_shard, e_shard))
+    return StepBundle(fn, (p_struct, batch["tokens"], batch["extra"]))
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_serve_step(cfg, shape, mesh)

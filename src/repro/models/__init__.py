@@ -1,0 +1,3 @@
+"""Model definitions: layers, attention, MoE, SSM, xLSTM, LM assembly."""
+from . import attention, flash, layers, lm, moe, ssm, xlstm  # noqa: F401
+from .lm import LM  # noqa: F401

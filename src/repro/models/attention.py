@@ -1,0 +1,136 @@
+"""GQA attention with RoPE, optional QKV-bias, soft-capping, sliding
+window, and decode-with-KV-cache. Pure functions over param pytrees.
+
+Shapes: x (B, S, D); caches (B, S_max, n_kv, hd). Sharding is applied at
+the step level (launch/sharding rules); einsum dims are chosen so head
+axes shard over 'model' and batch over ('pod','data') without relayout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, n_kv, hd)
+    v: jax.Array
+    # position is carried by the step, not the cache, so the cache pytree
+    # stays donate-able with a static treedef.
+
+
+def attn_init(key, cfg, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.eff_n_heads, cfg.eff_n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L._init(ks[0], (d, nh, hd), dtype=dtype),
+        "wk": L._init(ks[1], (d, nkv, hd), dtype=dtype),
+        "wv": L._init(ks[2], (d, nkv, hd), dtype=dtype),
+        "wo": L._init(ks[3], (nh, hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def _project_qkv(p, x, positions, cfg):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg, k_positions=None):
+    """q (B,S,nh,hd); k,v (B,T,nkv,hd) -> (B,S,nh,hd). GQA via reshape."""
+    nh, nkv = q.shape[2], k.shape[2]
+    group = nh // nkv
+    B, S = q.shape[:2]
+    T = k.shape[1]
+    qg = q.reshape(B, S, nkv, group, q.shape[3])
+    scale = 1.0 / np.sqrt(q.shape[3])
+    scores = jnp.einsum("bsngh,btnh->bnsgt", qg, k).astype(jnp.float32) * scale
+    scores = L.softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask[:, None, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnsgt,btnh->bsngh", probs, v)
+    return out.reshape(B, S, nh, q.shape[3])
+
+
+def causal_mask(S: int, window: Optional[int] = None):
+    i = np.arange(S)[:, None]
+    j = np.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    return jnp.asarray(m)[None]     # (1, S, T)
+
+
+def attention(p, x, positions, cfg, window: Optional[int] = None):
+    """Full (training/prefill) self-attention, causal."""
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    mask = causal_mask(x.shape[1], window)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, pos, cache: KVCache, cfg,
+                     window: Optional[int] = None) -> Tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, D); pos scalar int32 (same for batch).
+
+    The new K/V is written at `pos`; attention runs over the whole cache
+    with a validity mask (j <= pos, and within the sliding window if set).
+    """
+    B, _, D = x.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, cfg)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    T = k.shape[1]
+    j = jnp.arange(T)
+    valid = j <= pos
+    if window is not None:
+        valid &= (pos - j) < window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, T))
+    out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return y, KVCache(k, v)
+
+
+def cross_attention_init(key, cfg, dtype=jnp.bfloat16):
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention(p, x, enc_kv, cfg):
+    """Decoder cross-attention to precomputed encoder K/V (no causality)."""
+    B, S, _ = x.shape
+    positions = jnp.zeros((B, S), jnp.int32)   # no RoPE re-rotation on cross
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    k, v = enc_kv
+    T = k.shape[1]
+    mask = jnp.ones((B, S, T), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+
+
+def encode_kv(p, enc_out, cfg):
+    k = jnp.einsum("btd,dnh->btnh", enc_out, p["wk"])
+    v = jnp.einsum("btd,dnh->btnh", enc_out, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v

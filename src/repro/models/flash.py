@@ -1,0 +1,134 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+Full-sequence attention at 32k+ would materialise O(S^2) scores; this
+implements the streaming-softmax formulation with lax.scan over KV blocks
+inside a scan over Q blocks, so peak memory is O(q_block x kv_block).
+Sliding-window attention slices a static (window + q_block) KV strip per Q
+block, making local layers O(S x window) in both FLOPs and bytes.
+
+This is the jnp reference path used by the dry-run; a Pallas TPU kernel of
+the same schedule lives in repro/kernels/flash_tpu.py (validated against
+this in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scan_utils import seq_scan
+from . import scan_utils
+
+NEG_INF = -1e30
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    for d in range(min(k, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _scores(q, k, scale, softcap):
+    # q (B,Cq,nkv,g,hd) k (B,Ck,nkv,hd) -> (B,nkv,g,Cq,Ck) fp32
+    s = jnp.einsum("bqngh,bknh->bngqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int = 0,
+                    q_block: int = 512, kv_block: int = 1024):
+    """q (B,S,nh,hd); k,v (B,T,nkv,hd) -> (B,S,nh,hd).
+
+    `q_offset` is the absolute position of q[0] (chunked prefill).
+    """
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    scale = 1.0 / np.sqrt(hd)
+    if scan_utils.FLASH_Q_BLOCK:
+        q_block = scan_utils.FLASH_Q_BLOCK
+    if scan_utils.FLASH_KV_BLOCK:
+        kv_block = scan_utils.FLASH_KV_BLOCK
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    # frontends can make S non-power-of-two (e.g. 32768+256 vision tokens):
+    # use the largest divisor <= requested, not just power-of-two halving
+    # (33024 -> 768, not 256 — 3x fewer blocks).
+    q_block = _largest_divisor_leq(S, q_block)
+    kv_block = _largest_divisor_leq(T, kv_block)
+    nq = S // q_block
+    qr = q.reshape(B, nq, q_block, nkv, g, hd)
+    qr = jnp.moveaxis(qr, 1, 0)          # (nq, B, Cq, nkv, g, hd)
+
+    if window is not None:
+        # Local attention: one static KV strip of length window + q_block.
+        strip = min(window + q_block, T)
+
+        def q_step(_, args):
+            qi, qb = args
+            q_start = qi * q_block + q_offset
+            start = jnp.clip(q_start - window + 1, 0, T - strip)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, strip, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, strip, axis=1)
+            s = _scores(qb, ks, scale, softcap)
+            qpos = q_start + jnp.arange(q_block)
+            kpos = start + jnp.arange(strip)
+            m = kpos[None, :] <= qpos[:, None]
+            m &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(m[None, None, None], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bngqk,bknh->bqngh", p.astype(v.dtype), vs)
+            return None, o
+
+        _, outs = seq_scan(jax.checkpoint(q_step), None,
+                           (jnp.arange(nq), qr))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, nh, hd)
+        return out
+
+    nk = T // kv_block
+    assert T % kv_block == 0, (T, kv_block)
+    kr = jnp.moveaxis(k.reshape(B, nk, kv_block, nkv, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kv_block, nkv, hd), 1, 0)
+
+    def q_step(_, args):
+        qi, qb = args
+        qpos = qi * q_block + q_offset + jnp.arange(q_block)
+
+        def kv_step(carry, kv):
+            m_run, l_run, acc = carry
+            ki, kb, vb = kv
+            s = _scores(qb, kb, scale, softcap)       # (B,nkv,g,Cq,Ck)
+            if causal:
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bngqk,bknh->bngqh", p.astype(vb.dtype), vb)
+            acc = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, nkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, q_block, hd), v.dtype)
+        (m_f, l_f, acc), _ = seq_scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None].astype(acc.dtype)
+        # acc is (B,nkv,g,Cq,hd) -> (B,Cq,nkv,g,hd)
+        o = jnp.transpose(o, (0, 3, 1, 2, 4))
+        return None, o
+
+    _, outs = seq_scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qr))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, nh, hd)
+    return out

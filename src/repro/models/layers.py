@@ -1,0 +1,140 @@
+"""Shared neural layers (pure-JAX functional style: params are pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d):
+    # gemma convention: output scaled by (1 + scale), scale starts at 0
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    # f32 accumulation without materialising an f32 copy of x (einsum with
+    # preferred_element_type accumulates in f32; the scale/rsqrt factor is
+    # tiny and broadcast) — matters because CPU-XLA (the dry-run backend)
+    # does not fuse elementwise f32 casts the way TPU does.
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / d
+    inv = jax.lax.rsqrt(ss + eps)[..., None]
+    return (x * inv.astype(x.dtype)) * (1.0 + p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    d = x.shape[-1]
+    mu = (jnp.sum(x, axis=-1, dtype=jnp.float32) / d)[..., None]
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / d
+    var = jnp.maximum(ss[..., None] - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    xc = x - mu.astype(x.dtype)
+    return xc * inv.astype(x.dtype) * p["scale"].astype(x.dtype) \
+        + p["bias"].astype(x.dtype)
+
+
+def norm_init(kind, d):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def swiglu_init(key, d, d_ff, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": _init(k1, (d, d_ff), dtype=dtype),
+            "w_up": _init(k2, (d, d_ff), dtype=dtype),
+            "w_down": _init(k3, (d_ff, d), dtype=dtype)}
+
+
+def swiglu(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq).
+
+    Angles/sin/cos are f32 (position precision), the rotation itself is
+    applied in the input dtype — avoids materialising an f32 copy of the
+    full q/k tensors.
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def sinusoidal_pos(length, d, dtype=jnp.bfloat16, offset=0):
+    """Whisper-style sinusoidal position embeddings, computed on the fly
+    (any length; no fixed table)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None] + offset
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos * jnp.exp(-dim * (np.log(10000.0) / max(1, d // 2 - 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.bfloat16):
+    return {"table": _init(key, (vocab, d), scale=1.0, dtype=dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p, x, table=None):
+    t = table if table is not None else p["table"]
+    return jnp.einsum("...d,vd->...v", x, t)
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Mean CE over tokens; logits (..., V) bf16-safe (fp32 softmax).
+
+    Written as pure reductions + a masked label-logit sum (no
+    take_along_axis) so a vocab-sharded logits tensor lowers to the
+    Megatron scheme: local max/sumexp + tiny (B,S) all-reduces — the full
+    logits tensor never materialises per device.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    onehot = iota == labels[..., None]
+    ll = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1) + m[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

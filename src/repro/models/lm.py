@@ -1,0 +1,586 @@
+"""Model assembly: builds every assigned architecture from ModelConfig.
+
+Block patterns
+  dense    — uniform [attn, mlp] x L                  (qwen, stablelm, paligemma)
+  moe      — uniform [attn, moe-ffn] x L              (llama4, olmoe)
+  gemma2   — (local-window block, global block) x L/2 with softcaps
+  xlstm    — units of 8: 7 mLSTM + 1 sLSTM            (48L -> 6 units)
+  zamba    — mamba2 x L with one SHARED attn+mlp block applied every
+             `attn_every` layers (param sharing is the Zamba trick)
+  encdec   — whisper: non-causal encoder + causal decoder w/ cross-attn
+
+Layers are scanned (lax.scan over stacked params) so HLO size and compile
+time are O(1) in depth; remat wraps the scan body. All forwards are pure
+functions of (params, batch) pytrees — pjit shards them via the rules in
+repro/distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.common import ModelConfig
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import ssm as SSM
+from . import xlstm as X
+from .flash import flash_attention
+from .scan_utils import seq_scan
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _mlp_init(key, cfg, dtype):
+    if cfg.d_ff == 0:
+        return {}
+    if cfg.mlp_act == "gelu":
+        k1, k2 = jax.random.split(key)
+        return {"w_in": L._init(k1, (cfg.d_model, cfg.d_ff), dtype=dtype),
+                "w_down": L._init(k2, (cfg.d_ff, cfg.d_model), dtype=dtype)}
+    return L.swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _mlp_apply(p, x, cfg):
+    if not p:
+        return jnp.zeros_like(x)
+    if cfg.mlp_act == "gelu":
+        h = jnp.einsum("...d,df->...f", x, p["w_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    act = jax.nn.gelu if cfg.mlp_act == "geglu" else jax.nn.silu
+    h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ==========================================================================
+class LM:
+    """Decoder-only (and enc-dec) language model factory.
+
+    `sharder(x, kind)` is an optional activation-sharding hook (kinds:
+    "hidden", "logits") — the pjit layer injects with_sharding_constraint
+    so e.g. logits stay vocab-sharded through the loss.
+    """
+
+    def __init__(self, cfg: ModelConfig, sharder=None):
+        self.cfg = cfg
+        self.shard = sharder if sharder is not None else (lambda x, kind: x)
+
+    # ----- init -----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": L.embed_init(keys[0], cfg.vocab, cfg.d_model, dt),
+            "final_norm": L.norm_init(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.embed_init(keys[6], cfg.vocab, cfg.d_model, dt)
+
+        def dense_block(k):
+            ks = jax.random.split(k, 4)
+            return {"norm1": L.norm_init(cfg.norm, cfg.d_model),
+                    "attn": A.attn_init(ks[0], cfg, dt),
+                    "norm2": L.norm_init(cfg.norm, cfg.d_model),
+                    "mlp": _mlp_init(ks[1], cfg, dt)}
+
+        def moe_block(k):
+            ks = jax.random.split(k, 4)
+            return {"norm1": L.norm_init(cfg.norm, cfg.d_model),
+                    "attn": A.attn_init(ks[0], cfg, dt),
+                    "norm2": L.norm_init(cfg.norm, cfg.d_model),
+                    "moe": M.moe_init(ks[1], cfg.d_model, cfg.moe, dt)}
+
+        bp = cfg.block_pattern
+        if bp in ("dense",):
+            params["blocks"] = _stack_init(dense_block, keys[1], cfg.n_layers)
+        elif bp == "moe":
+            params["blocks"] = _stack_init(moe_block, keys[1], cfg.n_layers)
+        elif bp == "gemma2":
+            assert cfg.n_layers % 2 == 0
+            params["blocks_local"] = _stack_init(dense_block, keys[1],
+                                                 cfg.n_layers // 2)
+            params["blocks_global"] = _stack_init(dense_block, keys[2],
+                                                  cfg.n_layers // 2)
+        elif bp == "xlstm":
+            n_units = cfg.n_layers // 8
+            params["mlstm"] = _stack_init(
+                lambda k: {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                           "cell": X.mlstm_init(k, cfg.d_model, cfg.n_heads, dt)},
+                keys[1], n_units * 7)
+            params["slstm"] = _stack_init(
+                lambda k: {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                           "cell": X.slstm_init(k, cfg.d_model, cfg.n_heads, dt)},
+                keys[2], n_units)
+        elif bp == "zamba":
+            n_units = cfg.n_layers // cfg.attn_every
+            n_mamba = n_units * cfg.attn_every
+            params["mamba"] = _stack_init(
+                lambda k: {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                           "cell": SSM.ssm_init(k, cfg.d_model, cfg.ssm, dt)},
+                keys[1], n_mamba)
+            params["tail"] = _stack_init(
+                lambda k: {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                           "cell": SSM.ssm_init(k, cfg.d_model, cfg.ssm, dt)},
+                keys[3], cfg.n_layers - n_mamba) \
+                if cfg.n_layers > n_mamba else None
+            params["shared_attn"] = dense_block(keys[2])   # ONE shared block
+        elif bp == "encdec":
+            params["enc_blocks"] = _stack_init(dense_block, keys[1], cfg.n_layers)
+            params["enc_norm"] = L.norm_init(cfg.norm, cfg.d_model)
+
+            def dec_block(k):
+                ks = jax.random.split(k, 4)
+                return {"norm1": L.norm_init(cfg.norm, cfg.d_model),
+                        "attn": A.attn_init(ks[0], cfg, dt),
+                        "norm_x": L.norm_init(cfg.norm, cfg.d_model),
+                        "xattn": A.attn_init(ks[1], cfg, dt),
+                        "norm2": L.norm_init(cfg.norm, cfg.d_model),
+                        "mlp": _mlp_init(ks[2], cfg, dt)}
+            params["blocks"] = _stack_init(dec_block, keys[2], cfg.n_layers)
+        else:
+            raise ValueError(bp)
+        return params
+
+    # ----- shared pieces ---------------------------------------------------
+    def _embed_in(self, params, tokens, extra):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        if cfg.norm == "rmsnorm":
+            x = x * float(np.sqrt(cfg.d_model))  # python float: weak type, keeps bf16    # gemma-style embed scale
+        if cfg.frontend != "none" and extra is not None:
+            x = jnp.concatenate([extra.astype(x.dtype), x], axis=1)
+        return self.shard(x, "hidden")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.norm_apply(cfg.norm, params["final_norm"], x)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["lm_head"]["table"])
+        logits = L.unembed(None, x, table)
+        logits = self.shard(logits, "logits")
+        return L.softcap(logits, cfg.logit_softcap)
+
+    def _attn_block(self, blk, x, positions, window, q_offset=0):
+        cfg = self.cfg
+        h = L.norm_apply(cfg.norm, blk["norm1"], x)
+        q = jnp.einsum("bsd,dnh->bsnh", h, blk["attn"]["wq"])
+        k = jnp.einsum("bsd,dnh->bsnh", h, blk["attn"]["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", h, blk["attn"]["wv"])
+        if "bq" in blk["attn"]:
+            q = q + blk["attn"]["bq"]
+            k = k + blk["attn"]["bk"]
+            v = v + blk["attn"]["bv"]
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        wo = blk["attn"]["wo"]
+        o = flash_attention(q, k, v, causal=True, window=window,
+                            softcap=cfg.attn_softcap, q_offset=q_offset)
+        a = jnp.einsum("bsnh,nhd->bsd", o, wo)
+        x = x + a
+        h2 = L.norm_apply(cfg.norm, blk["norm2"], x)
+        if "moe" in blk:
+            f = M.moe_apply(blk["moe"], h2, cfg.moe, shard_fn=self.shard,
+                            seq_groups=cfg.moe_seq_groups)
+        else:
+            f = _mlp_apply(blk["mlp"], h2, cfg)
+        return x + f
+
+    # ----- forward (train / prefill) ---------------------------------------
+    def forward(self, params, tokens, extra=None) -> jax.Array:
+        cfg = self.cfg
+        bp = cfg.block_pattern
+        if bp == "encdec":
+            return self._forward_encdec(params, tokens, extra)
+        x = self._embed_in(params, tokens, extra)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        if bp in ("dense", "moe"):
+            def body(h, blk):
+                return self._attn_block(blk, h, positions,
+                                        cfg.sliding_window), None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = seq_scan(body, x, params["blocks"])
+        elif bp == "gemma2":
+            def body(h, blks):
+                bl, bg = blks
+                h = self._attn_block(bl, h, positions, cfg.sliding_window)
+                h = self._attn_block(bg, h, positions, None)
+                return h, None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = seq_scan(body, x,
+                                (params["blocks_local"], params["blocks_global"]))
+        elif bp == "xlstm":
+            n_units = cfg.n_layers // 8
+            ml = jax.tree.map(
+                lambda t: t.reshape((n_units, 7) + t.shape[1:]), params["mlstm"])
+
+            def body(h, blks):
+                mls, sl = blks
+
+                def mbody(hh, blk):
+                    y = X.mlstm_apply(blk["cell"],
+                                      L.norm_apply(cfg.norm, blk["norm"], hh),
+                                      cfg.n_heads)
+                    return hh + y, None
+                h, _ = seq_scan(mbody, h, mls)
+                y = X.slstm_apply(sl["cell"],
+                                  L.norm_apply(cfg.norm, sl["norm"], h),
+                                  cfg.n_heads)
+                return h + y, None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = seq_scan(body, x, (ml, params["slstm"]))
+        elif bp == "zamba":
+            n_units = cfg.n_layers // cfg.attn_every
+            ma = jax.tree.map(
+                lambda t: t.reshape((n_units, cfg.attn_every) + t.shape[1:]),
+                params["mamba"])
+            shared = params["shared_attn"]
+
+            def body(h, blks):
+                def mbody(hh, blk):
+                    y = SSM.ssm_apply(blk["cell"],
+                                      L.norm_apply(cfg.norm, blk["norm"], hh),
+                                      cfg.ssm)
+                    return hh + y, None
+                h, _ = seq_scan(mbody, h, blks)
+                h = self._attn_block(shared, h, positions, None)
+                return h, None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = seq_scan(body, x, ma)
+            if params.get("tail") is not None:
+                def tbody(hh, blk):
+                    y = SSM.ssm_apply(blk["cell"],
+                                      L.norm_apply(cfg.norm, blk["norm"], hh),
+                                      cfg.ssm)
+                    return hh + y, None
+                x, _ = seq_scan(tbody, x, params["tail"])
+        else:
+            raise ValueError(bp)
+        return self._logits(params, x)
+
+    def _forward_encdec(self, params, tokens, frames):
+        cfg = self.cfg
+        # --- encoder over stub frame embeddings ---
+        enc = frames.astype(_dtype(cfg))
+        Te = enc.shape[1]
+        enc = enc + L.sinusoidal_pos(Te, cfg.d_model, enc.dtype)[None]
+
+        def ebody(h, blk):
+            hh = L.norm_apply(cfg.norm, blk["norm1"], h)
+            q = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wv"])
+            o = flash_attention(q, k, v, causal=False)
+            h = h + jnp.einsum("bsnh,nhd->bsd", o, blk["attn"]["wo"])
+            h2 = L.norm_apply(cfg.norm, blk["norm2"], h)
+            return h + _mlp_apply(blk["mlp"], h2, cfg), None
+        ebody = jax.checkpoint(ebody) if cfg.remat else ebody
+        enc, _ = seq_scan(ebody, enc, params["enc_blocks"])
+        enc = L.norm_apply(cfg.norm, params["enc_norm"], enc)
+
+        # --- decoder ---
+        x = L.embed(params["embed"], tokens)
+        S = x.shape[1]
+        x = x + L.sinusoidal_pos(S, cfg.d_model, x.dtype)[None]
+
+        def dbody(h, blk):
+            hh = L.norm_apply(cfg.norm, blk["norm1"], h)
+            q = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wv"])
+            o = flash_attention(q, k, v, causal=True)
+            h = h + jnp.einsum("bsnh,nhd->bsd", o, blk["attn"]["wo"])
+            hx = L.norm_apply(cfg.norm, blk["norm_x"], h)
+            qx = jnp.einsum("bsd,dnh->bsnh", hx, blk["xattn"]["wq"])
+            kx = jnp.einsum("btd,dnh->btnh", enc, blk["xattn"]["wk"])
+            vx = jnp.einsum("btd,dnh->btnh", enc, blk["xattn"]["wv"])
+            ox = flash_attention(qx, kx, vx, causal=False)
+            h = h + jnp.einsum("bsnh,nhd->bsd", ox, blk["xattn"]["wo"])
+            h2 = L.norm_apply(cfg.norm, blk["norm2"], h)
+            return h + _mlp_apply(blk["mlp"], h2, cfg), None
+        dbody = jax.checkpoint(dbody) if cfg.remat else dbody
+        x, _ = seq_scan(dbody, x, params["blocks"])
+        return self._logits(params, x)
+
+    # ----- loss -------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        logits = self.forward(params, batch["tokens"], batch.get("extra"))
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:      # frontend-prefixed tokens
+            logits = logits[:, -labels.shape[1]:]
+        return L.cross_entropy(logits, labels)
+
+    # ----- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        bp = cfg.block_pattern
+        nkv, hd = cfg.eff_n_kv_heads, cfg.head_dim
+
+        def kv(n, length):
+            return A.KVCache(jnp.zeros((n, batch, length, nkv, hd), dt),
+                             jnp.zeros((n, batch, length, nkv, hd), dt))
+        if bp in ("dense", "moe"):
+            return kv(cfg.n_layers, max_len)
+        if bp == "gemma2":
+            w = min(cfg.sliding_window or max_len, max_len)
+            return {"local": kv(cfg.n_layers // 2, w),
+                    "global": kv(cfg.n_layers // 2, max_len)}
+        if bp == "xlstm":
+            n_units = cfg.n_layers // 8
+            d_inner = 2 * cfg.d_model
+            hdk = (d_inner // 2) // cfg.n_heads
+            hdv = d_inner // cfg.n_heads
+            return {
+                "mlstm": X.MLSTMState(
+                    jnp.zeros((n_units * 7, batch, cfg.n_heads, hdk, hdv),
+                              jnp.float32),
+                    jnp.zeros((n_units * 7, batch, cfg.n_heads, hdk),
+                              jnp.float32)),
+                "slstm": X.SLSTMState(
+                    *(jnp.zeros((n_units, batch, cfg.d_model), jnp.float32)
+                      for _ in range(3))),
+            }
+        if bp == "zamba":
+            n_units = cfg.n_layers // cfg.attn_every
+            n_mamba = n_units * cfg.attn_every
+            d_inner = cfg.ssm.expand * cfg.d_model
+            nh = d_inner // cfg.ssm.head_dim
+
+            def states(n):
+                return SSM.SSMState(
+                    jnp.zeros((n, batch, cfg.ssm.d_conv - 1, d_inner), dt),
+                    jnp.zeros((n, batch, nh, cfg.ssm.head_dim,
+                               cfg.ssm.d_state), jnp.float32))
+            return {"mamba": states(n_mamba),
+                    "tail": states(cfg.n_layers - n_mamba),
+                    "attn": kv(n_units, max_len)}
+        if bp == "encdec":
+            return {"self": kv(cfg.n_layers, max_len),
+                    "cross": None}   # filled by encode()
+        raise ValueError(bp)
+
+    def decode_step(self, params, cache, tokens, pos, enc_out=None):
+        """tokens (B,1) int32; pos scalar int32. Returns (logits, cache)."""
+        cfg = self.cfg
+        bp = cfg.block_pattern
+        x = L.embed(params["embed"], tokens)
+        if cfg.norm == "rmsnorm":
+            x = x * float(np.sqrt(cfg.d_model))  # python float: weak type, keeps bf16
+
+        if bp in ("dense", "moe"):
+            def body(h, xs):
+                blk, ck, cv = xs
+                y, new = A.attention_decode(blk["attn"],
+                                            L.norm_apply(cfg.norm, blk["norm1"], h),
+                                            pos, A.KVCache(ck, cv), cfg,
+                                            cfg.sliding_window)
+                h = h + y
+                h2 = L.norm_apply(cfg.norm, blk["norm2"], h)
+                if "moe" in blk:
+                    f = M.moe_apply(blk["moe"], h2, cfg.moe,
+                                    shard_fn=self.shard,
+                                    seq_groups=cfg.moe_seq_groups)
+                else:
+                    f = _mlp_apply(blk["mlp"], h2, cfg)
+                return h + f, (new.k, new.v)
+            x, (nk, nv) = seq_scan(body, x,
+                                       (params["blocks"], cache.k, cache.v))
+            return self._logits(params, x), A.KVCache(nk, nv)
+
+        if bp == "gemma2":
+            w = cache["local"].k.shape[2]
+
+            def body(h, xs):
+                bl, bg, lk, lv, gk, gv = xs
+                # local: ring-buffer cache of length `window`
+                hh = L.norm_apply(cfg.norm, bl["norm1"], h)
+                y, (nlk, nlv) = _ring_attn_decode(bl["attn"], hh, pos,
+                                                  lk, lv, cfg, w)
+                h = h + y
+                h2 = L.norm_apply(cfg.norm, bl["norm2"], h)
+                h = h + _mlp_apply(bl["mlp"], h2, cfg)
+                # global: full cache
+                hh = L.norm_apply(cfg.norm, bg["norm1"], h)
+                y, new = A.attention_decode(bg["attn"], hh, pos,
+                                            A.KVCache(gk, gv), cfg, None)
+                h = h + y
+                h2 = L.norm_apply(cfg.norm, bg["norm2"], h)
+                h = h + _mlp_apply(bg["mlp"], h2, cfg)
+                return h, (nlk, nlv, new.k, new.v)
+            x, (nlk, nlv, ngk, ngv) = seq_scan(
+                body, x, (params["blocks_local"], params["blocks_global"],
+                          cache["local"].k, cache["local"].v,
+                          cache["global"].k, cache["global"].v))
+            return self._logits(params, x), {"local": A.KVCache(nlk, nlv),
+                                             "global": A.KVCache(ngk, ngv)}
+
+        if bp == "xlstm":
+            n_units = cfg.n_layers // 8
+            mst = cache["mlstm"]
+            ml = jax.tree.map(
+                lambda t: t.reshape((n_units, 7) + t.shape[1:]), params["mlstm"])
+            mC = mst.C.reshape((n_units, 7) + mst.C.shape[1:])
+            mn = mst.n.reshape((n_units, 7) + mst.n.shape[1:])
+
+            def body(h, xs):
+                blks, C_u, n_u, sl, sc, sn, sh = xs
+
+                def mbody(hh, ys):
+                    blk, C_l, n_l = ys
+                    y, st = X.mlstm_decode(
+                        blk["cell"], L.norm_apply(cfg.norm, blk["norm"], hh),
+                        X.MLSTMState(C_l, n_l), cfg.n_heads)
+                    return hh + y, (st.C, st.n)
+                h, (nC, nn) = seq_scan(mbody, h, (blks, C_u, n_u))
+                y, st = X.slstm_decode(
+                    sl["cell"], L.norm_apply(cfg.norm, sl["norm"], h),
+                    X.SLSTMState(sc, sn, sh), cfg.n_heads)
+                return h + y, (nC, nn, st.c, st.n, st.h)
+            sst = cache["slstm"]
+            x, (nC, nn, sc, sn, sh) = seq_scan(
+                body, x, (ml, mC, mn, params["slstm"], sst.c, sst.n, sst.h))
+            new_cache = {
+                "mlstm": X.MLSTMState(nC.reshape(mst.C.shape),
+                                      nn.reshape(mst.n.shape)),
+                "slstm": X.SLSTMState(sc, sn, sh)}
+            return self._logits(params, x), new_cache
+
+        if bp == "zamba":
+            n_units = cfg.n_layers // cfg.attn_every
+            ma = jax.tree.map(
+                lambda t: t.reshape((n_units, cfg.attn_every) + t.shape[1:]),
+                params["mamba"])
+            st = cache["mamba"]
+            conv_u = st.conv.reshape((n_units, cfg.attn_every) + st.conv.shape[1:])
+            ssm_u = st.ssm.reshape((n_units, cfg.attn_every) + st.ssm.shape[1:])
+            shared = params["shared_attn"]
+
+            def body(h, xs):
+                blks, cv, sm, ak, av = xs
+
+                def mbody(hh, ys):
+                    blk, c1, s1 = ys
+                    y, ns = SSM.ssm_decode(
+                        blk["cell"], L.norm_apply(cfg.norm, blk["norm"], hh),
+                        SSM.SSMState(c1, s1), cfg.ssm)
+                    return hh + y, (ns.conv, ns.ssm)
+                h, (nc, ns) = seq_scan(mbody, h, (blks, cv, sm))
+                hh = L.norm_apply(cfg.norm, shared["norm1"], h)
+                y, new = A.attention_decode(shared["attn"], hh, pos,
+                                            A.KVCache(ak, av), cfg, None)
+                h = h + y
+                h2 = L.norm_apply(cfg.norm, shared["norm2"], h)
+                h = h + _mlp_apply(shared["mlp"], h2, cfg)
+                return h, (nc, ns, new.k, new.v)
+            x, (nc, ns, nak, nav) = seq_scan(
+                body, x, (ma, conv_u, ssm_u, cache["attn"].k, cache["attn"].v))
+            tail = cache["tail"]
+            if params.get("tail") is not None:
+                def tbody(hh, ys):
+                    blk, c1, s1 = ys
+                    y, nst = SSM.ssm_decode(
+                        blk["cell"], L.norm_apply(cfg.norm, blk["norm"], hh),
+                        SSM.SSMState(c1, s1), cfg.ssm)
+                    return hh + y, (nst.conv, nst.ssm)
+                x, (tc, ts) = seq_scan(
+                    tbody, x, (params["tail"], tail.conv, tail.ssm))
+                tail = SSM.SSMState(tc, ts)
+            new_cache = {
+                "mamba": SSM.SSMState(nc.reshape(st.conv.shape),
+                                      ns.reshape(st.ssm.shape)),
+                "tail": tail, "attn": A.KVCache(nak, nav)}
+            return self._logits(params, x), new_cache
+
+        if bp == "encdec":
+            x = L.embed(params["embed"], tokens)
+            x = x + L.sinusoidal_pos(1, cfg.d_model, x.dtype, offset=pos)[None]
+            cross = cache["cross"]   # (L,B,T,nkv,hd) pair, from encode()
+
+            def body(h, xs):
+                blk, ck, cv, xk, xv = xs
+                hh = L.norm_apply(cfg.norm, blk["norm1"], h)
+                y, new = A.attention_decode(blk["attn"], hh, pos,
+                                            A.KVCache(ck, cv), cfg, None)
+                h = h + y
+                hx = L.norm_apply(cfg.norm, blk["norm_x"], h)
+                ox = A.cross_attention(blk["xattn"], hx, (xk, xv), cfg)
+                h = h + ox
+                h2 = L.norm_apply(cfg.norm, blk["norm2"], h)
+                return h + _mlp_apply(blk["mlp"], h2, cfg), (new.k, new.v)
+            x, (nk, nv) = seq_scan(
+                body, x, (params["blocks"], cache["self"].k, cache["self"].v,
+                          cross[0], cross[1]))
+            return self._logits(params, x), {"self": A.KVCache(nk, nv),
+                                             "cross": cross}
+        raise ValueError(bp)
+
+    def encode(self, params, frames):
+        """encdec only: run encoder + per-layer cross-K/V for the decoder."""
+        cfg = self.cfg
+        enc = frames.astype(_dtype(cfg))
+        Te = enc.shape[1]
+        enc = enc + L.sinusoidal_pos(Te, cfg.d_model, enc.dtype)[None]
+
+        def ebody(h, blk):
+            hh = L.norm_apply(cfg.norm, blk["norm1"], h)
+            q = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", hh, blk["attn"]["wv"])
+            o = flash_attention(q, k, v, causal=False)
+            h = h + jnp.einsum("bsnh,nhd->bsd", o, blk["attn"]["wo"])
+            h2 = L.norm_apply(cfg.norm, blk["norm2"], h)
+            return h + _mlp_apply(blk["mlp"], h2, cfg), None
+        enc, _ = seq_scan(ebody, enc, params["enc_blocks"])
+        enc = L.norm_apply(cfg.norm, params["enc_norm"], enc)
+
+        def xkv(blk):
+            k = jnp.einsum("btd,dnh->btnh", enc, blk["xattn"]["wk"])
+            v = jnp.einsum("btd,dnh->btnh", enc, blk["xattn"]["wv"])
+            return k, v
+        ks, vs = jax.vmap(xkv)(params["blocks"])
+        return enc, (ks, vs)
+
+
+def _ring_attn_decode(p, x, pos, ck, cv, cfg, window):
+    """Sliding-window decode with a ring-buffer cache of length `window`.
+
+    Slot for position t is t % window; slot j currently holds position
+    pos - ((pos - j) mod window), which is within the window by
+    construction (unwritten slots have age > pos and mask off).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, window)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    j = jnp.arange(window)
+    age = jnp.mod(pos - j, window)
+    valid = age <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, window))
+    out = A._sdpa(q, ck, cv, mask, cfg)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return y, (ck, cv)

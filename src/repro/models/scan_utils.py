@@ -1,0 +1,38 @@
+"""Scan helper with a dry-run static-unroll mode.
+
+XLA's cost_analysis() counts a while-loop body ONCE regardless of trip
+count, which would make scanned attention/SSD chunks vanish from the
+roofline. The dry-run sets UNROLL_SCANS=True so sequence-dimension scans
+become static Python loops (fully visible to cost analysis), while the
+layer-dimension scan stays rolled and is corrected by L1/L2 extrapolation
+(launch/roofline.py). Production keeps everything rolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL_SCANS = False
+# Dry-run block-size overrides (coarser blocks keep the unrolled HLO small;
+# None = use the call-site default).
+FLASH_Q_BLOCK = None
+FLASH_KV_BLOCK = None
+
+
+def seq_scan(f, init, xs, length=None):
+    """lax.scan, or a static unroll of it when UNROLL_SCANS is set."""
+    if not UNROLL_SCANS:
+        return jax.lax.scan(f, init, xs, length=length)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda t: t[i], xs) if xs is not None else None
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys

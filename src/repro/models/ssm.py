@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) layer: chunked state-space duality formulation.
+
+Per head h (P = head_dim, N = d_state), scalar decay a_t in (0,1):
+    S_t = a_t * S_{t-1} + (dt_t x_t) B_t^T        (S in R^{P x N})
+    y_t = S_t C_t + D x_t
+Chunked algorithm (Mamba2 paper, alg. SSD): within-chunk quadratic term
+with decay-weighted attention-like matrix; cross-chunk recurrence scans
+chunk-final states. Recurrent single-step path for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .scan_utils import seq_scan
+from ..configs.common import SSMConfig
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array        # (B, d_conv-1, d_inner) rolling conv buffer
+    ssm: jax.Array         # (B, n_heads, head_dim, d_state)
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Input projections are kept as separate leaves (w_z/w_x/w_B/w_C/w_dt)
+    rather than one fused in_proj so each can carry its own TP sharding:
+    w_z/w_x shard d_inner over 'model' (heads stay whole because d_inner is
+    a multiple of head_dim x tp for the assigned configs), w_B/w_C/w_dt are
+    small and replicate."""
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": L._init(ks[0], (d_model, d_inner), dtype=dtype),
+        "w_x": L._init(ks[1], (d_model, d_inner), dtype=dtype),
+        "w_B": L._init(ks[4], (d_model, cfg.n_groups * cfg.d_state), dtype=dtype),
+        "w_C": L._init(ks[5], (d_model, cfg.n_groups * cfg.d_state), dtype=dtype),
+        "w_dt": L._init(ks[6], (d_model, n_heads), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.d_conv, d_inner)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),       # A = -exp(A_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L._init(ks[3], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(p, xw, d_inner, cfg, n_heads):
+    z = jnp.einsum("...d,dk->...k", xw, p["w_z"])
+    xs = jnp.einsum("...d,dk->...k", xw, p["w_x"])
+    B = jnp.einsum("...d,dk->...k", xw, p["w_B"])
+    C = jnp.einsum("...d,dk->...k", xw, p["w_C"])
+    dt = jnp.einsum("...d,dk->...k", xw, p["w_dt"])
+    return z, xs, B, C, dt
+
+
+def _gated_norm(p, y, z):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"])
+
+
+def ssm_apply(p, x, cfg: SSMConfig, chunk: int = 256) -> jax.Array:
+    """Training/prefill path. x (B, S, d_model) -> (B, S, d_model)."""
+    B_, S, d_model = x.shape
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    P, N = cfg.head_dim, cfg.d_state
+    z, xs, Bc, Cc, dt = _split_proj(p, x, d_inner, cfg, n_heads)
+
+    # causal depthwise conv on xs
+    pad = jnp.zeros((B_, cfg.d_conv - 1, d_inner), xs.dtype)
+    xpad = jnp.concatenate([pad, xs], axis=1)
+    xs = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(cfg.d_conv))
+    xs = jax.nn.silu((xs + p["conv_b"]).astype(jnp.float32))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    log_a = dt * A[None, None, :]                                     # (B,S,H) <= 0
+    xh = xs.reshape(B_, S, n_heads, P) * dt[..., None]                # dt-weighted input
+    Bg = Bc.reshape(B_, S, cfg.n_groups, N).astype(jnp.float32)
+    Cg = Cc.reshape(B_, S, cfg.n_groups, N).astype(jnp.float32)
+    if cfg.n_groups == 1:
+        Bh = jnp.broadcast_to(Bg, (B_, S, n_heads, N))
+        Ch = jnp.broadcast_to(Cg, (B_, S, n_heads, N))
+    else:
+        rep = n_heads // cfg.n_groups
+        Bh = jnp.repeat(Bg, rep, axis=2)
+        Ch = jnp.repeat(Cg, rep, axis=2)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # reshape into chunks and move the chunk axis to front for the scan:
+    # memory stays O(B x chunk^2 x H) — one chunk's decay matrix at a time.
+    def ck(t):
+        return jnp.moveaxis(t.reshape((B_, nc, chunk) + t.shape[2:]), 1, 0)
+    la, xck = ck(log_a), ck(xh)
+    Bk, Ckk = ck(Bh), ck(Ch)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(S_prev, inp):
+        la_c, x_c, B_c, C_c = inp          # (B,C,H), (B,C,H,P), (B,C,H,N) x2
+        cums = jnp.cumsum(la_c, axis=1)    # (B,C,H)
+        seg = cums[:, :, None, :] - cums[:, None, :, :]      # (B,s,t,H)
+        M = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bshv,bthv->bsth", C_c, B_c)
+        y_diag = jnp.einsum("bsth,bthp->bshp", scores * M, x_c)
+        decay_from_start = jnp.exp(cums)
+        y_cross = jnp.einsum("bshv,bsh,bhpv->bshp",
+                             C_c, decay_from_start, S_prev)
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums)       # (B,C,H)
+        S_chunk = jnp.einsum("bthv,bth,bthp->bhpv", B_c, decay_to_end, x_c)
+        a_c = jnp.exp(cums[:, -1, :])                        # (B,H)
+        S_new = S_prev * a_c[..., None, None] + S_chunk
+        return S_new, y_diag + y_cross
+
+    S0 = jnp.zeros((B_, n_heads, P, N), jnp.float32)
+    _, ys = seq_scan(jax.checkpoint(chunk_step), S0,
+                     (la, xck, Bk, Ckk))                     # (nc,B,C,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, n_heads, P)
+    y = y + p["D"][None, None, :, None] * xs.reshape(B_, S, n_heads, P)
+    y = _gated_norm(p, y.reshape(B_, S, d_inner), z)
+    return jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["out_proj"])
+
+
+def ssm_decode(p, x, state: SSMState, cfg: SSMConfig) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode. x (B, 1, d_model)."""
+    B_, _, d_model = x.shape
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    P, N = cfg.head_dim, cfg.d_state
+    z, xs, Bc, Cc, dt = _split_proj(p, x[:, 0], d_inner, cfg, n_heads)
+
+    conv_buf = jnp.concatenate([state.conv, xs[:, None]], axis=1)  # (B,dc,d)
+    xs = jnp.einsum("bcd,cd->bd", conv_buf, p["conv_w"]) + p["conv_b"]
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    new_conv = conv_buf[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                         # (B,H)
+    xh = xs.reshape(B_, n_heads, P) * dt[..., None]
+    Bh = jnp.broadcast_to(Bc.reshape(B_, cfg.n_groups, N),
+                          (B_, cfg.n_groups, N)).astype(jnp.float32)
+    Ch = Cc.reshape(B_, cfg.n_groups, N).astype(jnp.float32)
+    if cfg.n_groups == 1:
+        Bh = jnp.broadcast_to(Bh, (B_, n_heads, N))
+        Ch = jnp.broadcast_to(Ch, (B_, n_heads, N))
+    else:
+        rep = n_heads // cfg.n_groups
+        Bh = jnp.repeat(Bh, rep, axis=1)
+        Ch = jnp.repeat(Ch, rep, axis=1)
+
+    S_new = state.ssm * a[..., None, None] + jnp.einsum(
+        "bhp,bhv->bhpv", xh, Bh)
+    y = jnp.einsum("bhpv,bhv->bhp", S_new, Ch)
+    y = y + p["D"][None, :, None] * xs.reshape(B_, n_heads, P)
+    y = _gated_norm(p, y.reshape(B_, d_inner), z)
+    out = jnp.einsum("bk,kd->bd", y.astype(x.dtype), p["out_proj"])
+    return out[:, None], SSMState(new_conv, S_new)
+
+
+def ssm_ref(p, x, cfg: SSMConfig) -> jax.Array:
+    """Naive per-step recurrence oracle (tests)."""
+    B_, S, d_model = x.shape
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    state = SSMState(jnp.zeros((B_, cfg.d_conv - 1, d_inner), x.dtype),
+                     jnp.zeros((B_, n_heads, cfg.head_dim, cfg.d_state),
+                               jnp.float32))
+    outs = []
+    for t in range(S):
+        y, state = ssm_decode(p, x[:, t:t + 1], state, cfg)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def ssm_init_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> SSMState:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    return SSMState(
+        jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state), jnp.float32))

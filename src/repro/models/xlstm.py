@@ -1,0 +1,234 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunk-parallel) and sLSTM
+(scalar-memory, recurrent) — arXiv:2405.04517.
+
+mLSTM is a gated linear-attention recurrence
+    C_t = f_t C_{t-1} + i_t k_t v_t^T          (C in R^{hdk x hdv})
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+computed here in chunked form (quadratic within a chunk, scan across
+chunks) — the same schedule as the Mamba2 SSD path. Gates use sigmoid
+forget + sigmoid input (the paper's exp-gate stabiliser is unnecessary
+with bounded gates; noted in DESIGN.md). sLSTM keeps per-cell scalar
+state with block-diagonal recurrent weights and runs as a lax.scan over
+time (the paper: sLSTM is intentionally non-parallelisable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .scan_utils import seq_scan
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array     # (B, H, hdk, hdv)
+    n: jax.Array     # (B, H, hdk)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array     # (B, d_inner)
+    n: jax.Array
+    h: jax.Array
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def mlstm_init(key, d_model: int, n_heads: int, dtype=jnp.bfloat16,
+               proj_factor: int = 2) -> Dict[str, Any]:
+    d_inner = proj_factor * d_model     # v dim
+    qk_dim = d_inner // 2
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q": L._init(ks[0], (d_model, qk_dim), dtype=dtype),
+        "w_k": L._init(ks[1], (d_model, qk_dim), dtype=dtype),
+        "w_v": L._init(ks[2], (d_model, d_inner), dtype=dtype),
+        "w_gates": L._init(ks[3], (d_model, 2 * n_heads), dtype=jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((n_heads,)),
+                                    jnp.full((n_heads,), 3.0)]).astype(jnp.float32),
+        "w_o": L._init(ks[4], (d_model, d_inner), dtype=dtype),
+        "w_down": L._init(ks[5], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _mlstm_qkvgates(p, x, n_heads):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dk->bsk", x, p["w_q"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["w_k"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["w_v"])
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"]) \
+        + p["b_gates"]
+    i_g = jax.nn.sigmoid(gates[..., :n_heads])            # (B,S,H)
+    f_g = jax.nn.sigmoid(gates[..., n_heads:])
+    hdk = q.shape[-1] // n_heads
+    hdv = v.shape[-1] // n_heads
+    q = q.reshape(B, S, n_heads, hdk).astype(jnp.float32) / np.sqrt(hdk)
+    k = k.reshape(B, S, n_heads, hdk).astype(jnp.float32)
+    v = v.reshape(B, S, n_heads, hdv).astype(jnp.float32)
+    return q, k, v, i_g, f_g
+
+
+def mlstm_apply(p, x, n_heads: int, chunk: int = 256) -> jax.Array:
+    B, S, d_model = x.shape
+    q, k, v, i_g, f_g = _mlstm_qkvgates(p, x, n_heads)
+    hdk, hdv = q.shape[-1], v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # chunk axis in front for the scan: one chunk's decay matrix at a time.
+    def ck(t):
+        return jnp.moveaxis(t.reshape((B, nc, chunk) + t.shape[2:]), 1, 0)
+    qc, kc, vc = ck(q), ck(k), ck(v)
+    ic, fc = ck(i_g), ck(f_g)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev = carry
+        q_c, k_c, v_c, i_c, f_c = inp      # (B,C,H,hd) / (B,C,H)
+        log_f = jnp.log(f_c + 1e-12)
+        cums = jnp.cumsum(log_f, axis=1)                     # (B,C,H)
+        seg = cums[:, :, None, :] - cums[:, None, :, :]      # (B,s,t,H)
+        # D[s,t] = prod_{j=t+1..s} f_j * i_t   (within chunk)
+        D = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0) \
+            * i_c[:, None, :, :]
+        scores = jnp.einsum("bshk,bthk->bsth", q_c, k_c)
+        w = scores * D
+        y_diag = jnp.einsum("bsth,bthv->bshv", w, v_c)
+        den_diag = jnp.sum(w, axis=2)                        # (B,C,H)
+        decay_from_start = jnp.exp(cums)
+        y_cross = jnp.einsum("bshk,bsh,bhkv->bshv",
+                             q_c, decay_from_start, C_prev)
+        den_cross = jnp.einsum("bshk,bsh,bhk->bsh",
+                               q_c, decay_from_start, n_prev)
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums) * i_c  # (B,C,H)
+        C_chunk = jnp.einsum("bthk,bth,bthv->bhkv", k_c, decay_to_end, v_c)
+        n_chunk = jnp.einsum("bthk,bth->bhk", k_c, decay_to_end)
+        a_c = jnp.exp(cums[:, -1, :])                        # (B,H)
+        C_new = C_prev * a_c[..., None, None] + C_chunk
+        n_new = n_prev * a_c[..., None] + n_chunk
+        den = jnp.maximum(jnp.abs(den_diag + den_cross), 1.0)
+        h_c = (y_diag + y_cross) / den[..., None]
+        return (C_new, n_new), h_c
+
+    C0 = jnp.zeros((B, n_heads, hdk, hdv), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hdk), jnp.float32)
+    _, hs = seq_scan(jax.checkpoint(chunk_step), (C0, n0),
+                     (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, n_heads * hdv)
+
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x.astype(jnp.float32),
+                                  p["w_o"].astype(jnp.float32)))
+    out = (h * o).astype(x.dtype)
+    return jnp.einsum("bsk,kd->bsd", out, p["w_down"])
+
+
+def mlstm_decode(p, x, state: MLSTMState, n_heads: int
+                 ) -> Tuple[jax.Array, MLSTMState]:
+    B, _, d_model = x.shape
+    q, k, v, i_g, f_g = _mlstm_qkvgates(p, x, n_heads)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                # (B,H,hd)
+    i_g, f_g = i_g[:, 0], f_g[:, 0]                    # (B,H)
+    C_new = state.C * f_g[..., None, None] + \
+        jnp.einsum("bhk,bhv->bhkv", k * i_g[..., None], v)
+    n_new = state.n * f_g[..., None] + k * i_g[..., None]
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = (num / den[..., None]).reshape(B, -1)
+    o = jax.nn.sigmoid(jnp.einsum("bd,dk->bk", x[:, 0].astype(jnp.float32),
+                                  p["w_o"].astype(jnp.float32)))
+    out = (h * o).astype(x.dtype)
+    return jnp.einsum("bk,kd->bd", out, p["w_down"])[:, None], \
+        MLSTMState(C_new, n_new)
+
+
+def mlstm_ref(p, x, n_heads: int) -> jax.Array:
+    """Step-by-step oracle."""
+    B, S, d = x.shape
+    hdk = p["w_q"].shape[1] // n_heads
+    hdv = p["w_v"].shape[1] // n_heads
+    st = MLSTMState(jnp.zeros((B, n_heads, hdk, hdv), jnp.float32),
+                    jnp.zeros((B, n_heads, hdk), jnp.float32))
+    outs = []
+    for t in range(S):
+        y, st = mlstm_decode(p, x[:, t:t + 1], st, n_heads)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+def mlstm_init_state(batch, d_model, n_heads, proj_factor=2) -> MLSTMState:
+    d_inner = proj_factor * d_model
+    hdk = (d_inner // 2) // n_heads
+    hdv = d_inner // n_heads
+    return MLSTMState(jnp.zeros((batch, n_heads, hdk, hdv), jnp.float32),
+                      jnp.zeros((batch, n_heads, hdk), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def slstm_init(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    hd = d_model // n_heads
+    return {
+        "w_in": L._init(ks[0], (d_model, 4 * d_model), dtype=jnp.float32),
+        "r": (jax.random.normal(ks[1], (n_heads, 4, hd, hd)) /
+              np.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((3 * d_model,)),
+                              jnp.full((d_model,), 2.0)]).astype(jnp.float32),
+        "w_down": L._init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def slstm_apply(p, x, n_heads: int) -> jax.Array:
+    """Recurrent scan over time. Gates: z, i, o, f per cell; block-diagonal
+    recurrence on h (per-head)."""
+    B, S, d = x.shape
+    hd = d // n_heads
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_in"]) + p["b"]
+
+    def step(state: SLSTMState, wx_t):
+        h_heads = state.h.reshape(B, n_heads, hd)
+        rh = jnp.einsum("bnh,ngho->bngo", h_heads, p["r"])  # (B,H,4,hd)
+        rh = jnp.moveaxis(rh, 2, 1).reshape(B, 4 * d)       # order z,i,o,f
+        g = wx_t + rh
+        z, i, o, f = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z)
+        i = jax.nn.sigmoid(i)
+        o = jax.nn.sigmoid(o)
+        f = jax.nn.sigmoid(f)
+        c = f * state.c + i * z
+        n = f * state.n + i
+        h = o * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, h), h
+
+    s0 = SLSTMState(*(jnp.zeros((B, d), jnp.float32) for _ in range(3)))
+    _, hs = jax.lax.scan(step, s0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return jnp.einsum("bsd,do->bso", h, p["w_down"])
+
+
+def slstm_decode(p, x, state: SLSTMState, n_heads: int
+                 ) -> Tuple[jax.Array, SLSTMState]:
+    B, _, d = x.shape
+    hd = d // n_heads
+    wx = jnp.einsum("bd,dg->bg", x[:, 0].astype(jnp.float32), p["w_in"]) + p["b"]
+    h_heads = state.h.reshape(B, n_heads, hd)
+    rh = jnp.einsum("bnh,ngho->bngo", h_heads, p["r"])
+    rh = jnp.moveaxis(rh, 2, 1).reshape(B, 4 * d)
+    z, i, o, f = jnp.split(wx + rh, 4, axis=-1)
+    z, i, o, f = jnp.tanh(z), jax.nn.sigmoid(i), jax.nn.sigmoid(o), jax.nn.sigmoid(f)
+    c = f * state.c + i * z
+    n = f * state.n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    out = jnp.einsum("bd,do->bo", h.astype(x.dtype), p["w_down"])
+    return out[:, None], SLSTMState(c, n, h)
+
+
+def slstm_init_state(batch, d_model) -> SLSTMState:
+    return SLSTMState(*(jnp.zeros((batch, d_model), jnp.float32)
+                        for _ in range(3)))

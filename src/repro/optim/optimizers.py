@@ -1,0 +1,158 @@
+"""Optimizers (pure-pytree, no external deps): AdamW and Adafactor.
+
+Adafactor keeps factored second moments (and optionally bf16 accumulators)
+so optimizer state for 100B+ models fits HBM — required for the
+llama4-class config at 16 GB/chip (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+# --------------------------------------------------------------------------
+# schedule
+# --------------------------------------------------------------------------
+def wsd_schedule(peak_lr: float, warmup: int = 100, total: int = 10000,
+                 min_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        decay = 1.0 - (1.0 - min_frac) * jnp.maximum(
+            0.0, (s - warmup) / max(1, total - warmup))
+        return peak_lr * jnp.minimum(warm, jnp.minimum(1.0, decay))
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    leaves = jax.tree.leaves(grads)
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jnp.zeros((), jnp.int32),
+                    AdamState(jax.tree.map(zeros, params),
+                              jax.tree.map(zeros, params)))
+
+
+def adamw_update(params, grads, state: OptState, lr_fn,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    lr = lr_fn(step)
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        update = (m_new / b1t) / (jnp.sqrt(v_new / b2t) + eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.inner.m)
+    flat_v = jax.tree.leaves(state.inner.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, AdamState(new_m, new_v))
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment; bf16 accumulators optional)
+# --------------------------------------------------------------------------
+class FactorState(NamedTuple):
+    vr: Any     # row accumulators (or full v for <2D leaves)
+    vc: Any     # col accumulators (or None sentinel zeros)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params, state_dtype=jnp.bfloat16) -> OptState:
+    def vr(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], state_dtype)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], state_dtype)
+        return jnp.zeros((1,), state_dtype)
+    return OptState(jnp.zeros((), jnp.int32),
+                    FactorState(jax.tree.map(vr, params),
+                                jax.tree.map(vc, params)))
+
+
+def adafactor_update(params, grads, state: OptState, lr_fn,
+                     decay=0.99, eps=1e-30, clip_thresh=1.0):
+    step = state.step + 1
+    lr = lr_fn(step)
+
+    def upd(p, g, vr, vc):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + eps
+        if _factored(p):
+            vr_new = decay * vr.astype(jnp.float32) + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_new = decay * vc.astype(jnp.float32) + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (vr_new[..., None] * vc_new[..., None, :]
+                     / jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True)[..., None], eps))
+            update = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr_new = decay * vr + (1 - decay) * g2
+            vc_new = vc
+            update = gf * jax.lax.rsqrt(jnp.maximum(vr_new, eps))
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_thresh)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, vr_new.astype(vr.dtype), vc_new.astype(vc.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_vr = jax.tree.leaves(state.inner.vr)
+    flat_vc = jax.tree.leaves(state.inner.vc)
+    out = [upd(p, g, r, c) for p, g, r, c in
+           zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_vr = tdef.unflatten([o[1] for o in out])
+    new_vc = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, FactorState(new_vr, new_vc))
+
+
+def make_optimizer(kind: str, peak_lr: float = 3e-4,
+                   warmup: int = 100, total: int = 10000):
+    lr_fn = wsd_schedule(peak_lr, warmup, total)
+    if kind == "adamw":
+        return adamw_init, partial(adamw_update, lr_fn=lr_fn)
+    if kind == "adafactor":
+        return adafactor_init, partial(adafactor_update, lr_fn=lr_fn)
+    raise ValueError(kind)

@@ -1,0 +1,46 @@
+"""Bit-plane layout: pack/unpack roundtrips (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitslice
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 40), st.integers(0, 2**32))
+def test_pack_unpack_roundtrip(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << bits, n, dtype=np.uint64)
+    planes = bitslice.pack_bits(vals, bits)
+    back = bitslice.unpack_bits(planes, n)
+    assert (back == vals).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5000), st.integers(0, 2**32))
+def test_mask_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.random(n) < 0.3
+    packed = bitslice.pack_mask(m)
+    assert (bitslice.unpack_mask(packed, n) == m).all()
+
+
+def test_padding_is_tile_aligned():
+    assert bitslice.pad_words(1) == bitslice.TILE_WORDS
+    assert bitslice.pad_words(bitslice.TILE_RECORDS) == bitslice.TILE_WORDS
+    assert bitslice.pad_words(bitslice.TILE_RECORDS + 1) == 2 * bitslice.TILE_WORDS
+
+
+def test_layout_coordinates_and_utilization():
+    cols = {"a": np.arange(100), "b": np.arange(100) * 7}
+    layout = bitslice.build_layout(cols)
+    c = layout.coordinates(33, "a", 2)
+    assert c["tile"] == 0 and c["lane"] == 33 % 32
+    assert 0 < layout.memory_utilization() < 1
+    with pytest.raises(IndexError):
+        layout.coordinates(0, "a", 99)
+
+
+def test_negative_values_rejected():
+    with pytest.raises(ValueError):
+        bitslice.pack_bits(np.asarray([-1, 2]), 4)

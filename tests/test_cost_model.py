@@ -1,0 +1,82 @@
+"""Paper Table 4 / §6 analytics: cycle formulas, energy, endurance."""
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import isa
+
+
+def test_table4_cycle_formulas():
+    # spot checks against Table 4 with hand-computed imm0/imm1
+    assert isa.EqualImm(dest="", attr="a", imm=0b1011, n_bits=4).cycles() \
+        == 1 + 3 * 3 + 1          # imm0=1, imm1=3
+    assert isa.NotEqualImm(dest="", attr="a", imm=0, n_bits=5).cycles() \
+        == 5 + 0 + 3
+    assert isa.LessThanImm(dest="", attr="a", imm=0b11, n_bits=4).cycles() \
+        == 11 * 2 + 3 * 2 + 4
+    assert isa.GreaterThanImm(dest="", attr="a", imm=0b1111, n_bits=4).cycles() \
+        == 0 + 3 * 4 + 2
+    assert isa.AddImm(dest="", attr="a", imm=1, n_bits=8).cycles() == 18 * 8 + 3
+    assert isa.Equal(dest="", attr_a="a", attr_b="b", n_bits=12).cycles() \
+        == 11 * 12 + 3
+    assert isa.LessThan(dest="", attr_a="a", attr_b="b", n_bits=7).cycles() \
+        == 16 * 7 + 2
+    assert isa.Add(dest="", attr_a="a", attr_b="b", n_bits=16).cycles() \
+        == 18 * 16 + 1
+    assert isa.Multiply(dest="", attr_a="a", attr_b="b",
+                        n_bits=8, m_bits=4).cycles() \
+        == 24 * 8 * 4 - 19 * 8 + 2 * 4 - 1
+    assert isa.ReduceSum(dest="", attr="a", mask="m", n_bits=10).cycles() \
+        == 2254 * 10 + 3006
+    assert isa.ReduceMinMax(dest="", attr="a", mask="m", n_bits=10).cycles() \
+        == 2306 * 10 + 200
+    assert isa.ColumnTransform(dest="", mask="m").cycles() == 2050
+    assert isa.SetReset(dest="", value=1, n_bits=3).cycles() == 3
+    assert isa.BitwiseAnd(dest="", src_a="a", src_b="b", n_bits=1).cycles() == 6
+    assert isa.BitwiseOr(dest="", src_a="a", src_b="b", n_bits=1).cycles() == 4
+    assert isa.BitwiseNot(dest="", src="a", n_bits=1).cycles() == 2
+
+
+def test_intermediate_cells_match_table4():
+    assert isa.LessThanImm(dest="", attr="a", imm=1, n_bits=4).intermediate_cells() == 5
+    assert isa.ReduceSum(dest="", attr="a", mask="m", n_bits=10).intermediate_cells() == 25
+    assert isa.ReduceMinMax(dest="", attr="a", mask="m", n_bits=10).intermediate_cells() == 17
+
+
+def test_program_classification():
+    prog = [isa.EqualImm(dest="m", attr="a", imm=3, n_bits=4),
+            isa.ReduceSum(dest="s", attr="b", mask="m", n_bits=8),
+            isa.ColumnTransform(dest="c", mask="m")]
+    cost = cm.classify_program(prog)
+    assert cost.cycles_filter > 0
+    assert cost.cycles_reduce_row > 0 and cost.cycles_reduce_col > 0
+    assert cost.cycles_col_transform == 2050
+    assert cost.cycles_total == sum(cost.breakdown().values())
+
+
+def test_timing_read_reduction_drives_speedup():
+    cost = cm.ProgramCost(cycles_filter=500)
+    n = 10_000_000
+    base_bytes = n * 4                       # 32-bit attribute scan
+    pim_bytes = cm.pim_read_bytes_filter(n)  # 1 bit per record
+    t = cm.query_timing(cost, n, n // 1024, base_bytes, pim_bytes)
+    assert t.read_reduction == pytest.approx(32.0, rel=0.01)
+    assert t.speedup > 1.0
+
+
+def test_energy_and_endurance_positive():
+    cost = cm.ProgramCost(cycles_filter=500, cycles_reduce_col=2000,
+                          cycles_reduce_row=20000)
+    t = cm.query_timing(cost, 10**7, 10**4, 10**7, 10**5)
+    e = cm.query_energy(cost, t, 10**4)
+    assert e.pimdb_total_j > 0 and e.baseline_j > 0
+    end = cm.endurance_ops_per_cell(cost, exec_time_s=t.pimdb_total_s)
+    # paper Fig. 15: well under RRAM's 1e12 for realistic queries
+    assert 0 < end < 1e14
+
+
+def test_baseline_cacheline_model():
+    # selective later columns cost less, but never more than a full scan
+    full = cm.baseline_scan_bytes(10**6, [32, 32], [1.0, 1.0])
+    sel = cm.baseline_scan_bytes(10**6, [32, 32], [0.001, 1.0])
+    assert sel < full
+    assert sel >= 10**6 * 4        # first column always fully scanned

@@ -1,0 +1,111 @@
+"""Bulk-bitwise engine vs numpy oracle (property-based)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, isa
+
+
+def _relation(rng, n, widths):
+    cols = {f"c{i}": rng.integers(0, 1 << w, n) for i, w in enumerate(widths)}
+    return cols, engine.PimRelation.from_columns("t", cols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 24), st.integers(0, 2**31),
+       st.sampled_from(["eq", "ne", "lt", "le", "gt", "ge"]))
+def test_imm_comparisons(n, width, seed, op):
+    rng = np.random.default_rng(seed)
+    cols, rel = _relation(rng, n, [width])
+    v = cols["c0"]
+    imm = int(rng.integers(0, 1 << width))
+    e = engine.Engine(rel)
+    instr = {
+        "eq": isa.EqualImm(dest="m", attr="c0", imm=imm, n_bits=width),
+        "ne": isa.NotEqualImm(dest="m", attr="c0", imm=imm, n_bits=width),
+        "lt": isa.LessThanImm(dest="m", attr="c0", imm=imm, n_bits=width),
+        "le": isa.LessThanImm(dest="m", attr="c0", imm=imm, n_bits=width,
+                              or_equal=True),
+        "gt": isa.GreaterThanImm(dest="m", attr="c0", imm=imm, n_bits=width),
+        "ge": isa.GreaterThanImm(dest="m", attr="c0", imm=imm, n_bits=width,
+                                 or_equal=True),
+    }[op]
+    e.execute(instr)
+    want = {"eq": v == imm, "ne": v != imm, "lt": v < imm, "le": v <= imm,
+            "gt": v > imm, "ge": v >= imm}[op]
+    assert (e.read_mask("m") == want).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 16), st.integers(1, 16),
+       st.integers(0, 2**31))
+def test_attr_comparisons_and_arith(n, wa, wb, seed):
+    rng = np.random.default_rng(seed)
+    cols, rel = _relation(rng, n, [wa, wb])
+    a, b = cols["c0"], cols["c1"]
+    e = engine.Engine(rel)
+    w = max(wa, wb)
+    e.execute(isa.Equal(dest="meq", attr_a="c0", attr_b="c1", n_bits=w))
+    e.execute(isa.LessThan(dest="mlt", attr_a="c0", attr_b="c1", n_bits=w))
+    assert (e.read_mask("meq") == (a == b)).all()
+    assert (e.read_mask("mlt") == (a < b)).all()
+    e.execute(isa.Add(dest="s", attr_a="c0", attr_b="c1", n_bits=w + 1))
+    e.execute(isa.ReduceSum(dest="t", attr="s", mask="__valid__", n_bits=w + 1))
+    assert int(e.read_scalar("t")) == int((a + b).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 1500), st.integers(1, 14), st.integers(0, 2**31),
+       st.integers(1, 200))
+def test_aggregates(n, width, seed, imm):
+    rng = np.random.default_rng(seed)
+    cols, rel = _relation(rng, n, [width, 8])
+    v, f = cols["c0"], cols["c1"]
+    e = engine.Engine(rel)
+    e.execute(isa.LessThanImm(dest="m", attr="c1", imm=imm % 256, n_bits=8))
+    e.execute(isa.BitwiseAnd(dest="m", src_a="m", src_b="__valid__"))
+    sel = f < (imm % 256)
+    e.execute(isa.ReduceSum(dest="s", attr="c0", mask="m", n_bits=width))
+    assert int(e.read_scalar("s")) == int(v[sel].sum())
+    assert e.count("m") == int(sel.sum())
+    if sel.any():
+        e.execute(isa.ReduceMinMax(dest="mn", attr="c0", mask="m",
+                                   n_bits=width))
+        e.execute(isa.ReduceMinMax(dest="mx", attr="c0", mask="m",
+                                   n_bits=width, is_max=True))
+        assert int(e.read_scalar("mn")) == int(v[sel].min())
+        assert int(e.read_scalar("mx")) == int(v[sel].max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 800), st.integers(1, 10), st.integers(1, 6),
+       st.integers(0, 2**31))
+def test_multiply(n, wa, wb, seed):
+    rng = np.random.default_rng(seed)
+    cols, rel = _relation(rng, n, [wa, wb])
+    a, b = cols["c0"], cols["c1"]
+    e = engine.Engine(rel)
+    e.execute(isa.Multiply(dest="p", attr_a="c0", attr_b="c1",
+                           n_bits=wa + wb, m_bits=wb))
+    e.execute(isa.ReduceSum(dest="t", attr="p", mask="__valid__",
+                            n_bits=wa + wb))
+    assert int(e.read_scalar("t")) == int((a * b).sum())
+    imm = int(rng.integers(1, 1 << wb))
+    e.execute(isa.Multiply(dest="pi", attr_a="c0", imm=imm,
+                           n_bits=wa + wb, m_bits=wb))
+    e.execute(isa.ReduceSum(dest="ti", attr="pi", mask="__valid__",
+                            n_bits=wa + wb))
+    assert int(e.read_scalar("ti")) == int((a * imm).sum())
+
+
+def test_rsub_via_not_add():
+    """imm - attr via BitwiseNot + AddImm (the compiler's RSubImm path)."""
+    rng = np.random.default_rng(0)
+    cols, rel = _relation(rng, 500, [7])
+    a = np.minimum(cols["c0"], 100)
+    cols["c0"] = a
+    rel = engine.PimRelation.from_columns("t", cols)
+    e = engine.Engine(rel)
+    e.execute(isa.BitwiseNot(dest="na", src="c0", n_bits=7))
+    e.execute(isa.AddImm(dest="r", attr="na", imm=101, n_bits=7))
+    e.execute(isa.ReduceSum(dest="t", attr="r", mask="__valid__", n_bits=7))
+    assert int(e.read_scalar("t")) == int(((100 - a) % 128).sum())

@@ -1,0 +1,187 @@
+"""Model-layer correctness: flash vs dense, SSD/mLSTM vs recurrence, MoE
+vs dense oracle, per-arch smoke (fwd + train step + decode step)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.common import MoEConfig, SSMConfig
+from repro.models import moe, ssm, xlstm
+from repro.models.flash import flash_attention
+from repro.models.lm import LM
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+def _dense_attn(q, k, v, causal=True, window=None, softcap=None):
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    qg = q.reshape(B, S, nkv, nh // nkv, hd)
+    s = jnp.einsum("bqngh,bknh->bngqk", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos, kpos = np.arange(S), np.arange(T)
+    m = np.ones((S, T), bool)
+    if causal:
+        m &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None]) < window
+    s = jnp.where(jnp.asarray(m)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bngqk,bknh->bqngh", p.astype(v.dtype), v).reshape(
+        B, S, nh, hd)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False), dict(causal=True, softcap=30.0),
+    dict(causal=True, window=64)])
+def test_flash_matches_dense(kwargs):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 256, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 256, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 256, 4, 32)), jnp.float32)
+    out = flash_attention(q, k, v, q_block=64, kv_block=64, **kwargs)
+    ref = _dense_attn(q, k, v, **kwargs)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_flash_odd_seq_autoblock():
+    """Non-power-of-two S (vision-prefixed seq) picks a dividing block."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 272, 4, 16)), jnp.float32)  # 272=16*17
+    k = jnp.asarray(rng.normal(size=(1, 272, 4, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 272, 4, 16)), jnp.float32)
+    out = flash_attention(q, k, v, q_block=64, kv_block=128)
+    ref = _dense_attn(q, k, v)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_ssd_chunked_matches_recurrence():
+    cfg = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16)
+    p = ssm.ssm_init(jax.random.PRNGKey(0), 32, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    err = float(jnp.max(jnp.abs(ssm.ssm_apply(p, x, cfg, chunk=16)
+                                - ssm.ssm_ref(p, x, cfg))))
+    assert err < 1e-3
+
+
+def test_mlstm_chunked_matches_recurrence():
+    p = xlstm.mlstm_init(jax.random.PRNGKey(0), 32, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    err = float(jnp.max(jnp.abs(xlstm.mlstm_apply(p, x, 4, chunk=16)
+                                - xlstm.mlstm_ref(p, x, 4))))
+    assert err < 1e-3
+
+
+def test_slstm_scan_matches_decode():
+    p = xlstm.slstm_init(jax.random.PRNGKey(0), 32, 4, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32), jnp.float32)
+    y1 = xlstm.slstm_apply(p, x, 4)
+    st = xlstm.slstm_init_state(2, 32)
+    outs = []
+    for t in range(32):
+        o, st = xlstm.slstm_decode(p, x[:, t:t + 1], st, 4)
+        outs.append(o)
+    err = float(jnp.max(jnp.abs(y1 - jnp.concatenate(outs, 1))))
+    assert err < 1e-4
+
+
+def test_moe_matches_dense_oracle():
+    cfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32)
+    p = moe.moe_init(jax.random.PRNGKey(0), 16, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 64, 16), jnp.float32)
+    err = float(jnp.max(jnp.abs(moe.moe_apply(p, x, cfg, capacity=128)
+                                - moe.moe_ref(p, x, cfg))))
+    assert err < 2e-5
+
+
+def test_moe_capacity_drop_is_bounded():
+    """Dropped tokens produce zero expert output, not garbage."""
+    cfg = MoEConfig(n_experts=4, top_k=1, d_ff_expert=16)
+    p = moe.moe_init(jax.random.PRNGKey(0), 8, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8), jnp.float32)
+    y = moe.moe_apply(p, x, cfg, capacity=1)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    """Reduced config: forward shapes + no NaNs + one train/decode step."""
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    B, S = 2, 16
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    extra = None
+    if cfg.frontend == "vision_stub":
+        extra = jax.random.normal(jax.random.PRNGKey(3),
+                                  (B, cfg.n_frontend_tokens, cfg.d_model))
+    elif cfg.frontend == "audio_stub":
+        extra = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model))
+
+    logits = model.forward(params, tokens, extra)
+    exp = S + (cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0)
+    assert logits.shape == (B, exp, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    batch = {"tokens": tokens, "labels": labels, "extra": extra}
+    init_fn, update_fn = make_optimizer(cfg.optimizer)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    grads, _ = clip_by_global_norm(grads)
+    params2, _ = update_fn(params, grads, init_fn(params))
+    loss2 = model.loss(params2, batch)
+    assert np.isfinite(float(loss2))
+
+    cache = model.init_cache(B, S)
+    if cfg.block_pattern == "encdec":
+        _, cross = model.encode(params, extra)
+        cache["cross"] = cross
+    lg, cache2 = model.decode_step(params, cache, tokens[:, :1], jnp.int32(0))
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+
+
+def test_decode_matches_forward_dense():
+    """Greedy decode logits == teacher-forced forward logits (dense arch)."""
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, remat=False)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = model.forward(params, tokens)
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full.astype(jnp.float32)
+                                - dec.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(full.astype(jnp.float32))))
+    assert err < max(0.01 * scale, 0.25), (err, scale)   # bf16 tolerance
+
+
+def test_gemma2_ring_cache_matches_forward():
+    cfg = get_smoke_config("gemma2-9b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 24                     # > window (16) to exercise the ring
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = model.forward(params, tokens)
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full.astype(jnp.float32)
+                                - dec.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(full.astype(jnp.float32))))
+    assert err < max(0.01 * scale, 0.25), (err, scale)   # bf16 tolerance

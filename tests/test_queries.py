@@ -1,0 +1,50 @@
+"""TPC-H: all 19 evaluated queries — PIM engine == column-scan oracle."""
+import numpy as np
+import pytest
+
+from repro.db import database, queries, tpch
+
+SF = 0.002
+
+
+@pytest.fixture(scope="module")
+def db():
+    return database.PimDatabase(tpch.generate(sf=SF, seed=123))
+
+
+@pytest.mark.parametrize("qname", [q.name for q in queries.all_queries()])
+def test_query_matches_oracle(db, qname):
+    spec = queries.get_query(qname)
+    pim = db.run_pim(spec)
+    base = db.run_baseline(spec)
+    for rel in spec.filters:
+        np.testing.assert_array_equal(pim.relations[rel].mask,
+                                      base.relations[rel].mask, err_msg=rel)
+    assert pim.aggregates == base.aggregates
+
+
+def test_cost_reports_paper_scale(db):
+    """Cost model at paper scale: every query must show a read reduction
+    (the paper's headline mechanism) and full queries >= filter-only."""
+    for spec in queries.all_queries():
+        run = db.run_pim(spec)
+        rep = database.cost_report(run, sf_scale=1000 / SF)
+        assert rep.read_reduction > 1.0, spec.name
+        assert rep.cycles["total"] > 0
+        if spec.kind == "full":
+            assert rep.cycles["reduce_col"] + rep.cycles["reduce_row"] > 0
+
+
+def test_filter_only_has_column_transform(db):
+    spec = queries.get_query("Q12")
+    run = db.run_pim(spec)
+    kinds = [i.kind for i in run.relations["lineitem"].trace]
+    assert "ColumnTransform" in kinds          # paper Fig. 6 readout path
+
+
+def test_q1_group_count(db):
+    spec = queries.get_query("Q1")
+    run = db.run_pim(spec)
+    assert len(run.aggregates) == 6            # rf x ls combos
+    base = db.run_baseline(spec)
+    assert run.aggregates == base.aggregates
