@@ -81,4 +81,51 @@ def run_benches() -> List[Tuple[str, float, str]]:
     # packed mask readout (column-transform analogue): bytes host must read
     rows.append(("readout_reduction", 0.0,
                  f"filter_bytes={N//8};fullwidth_bytes={N*2};ratio=16.0"))
+
+    rows.extend(bench_program_fusion())
     return rows
+
+
+def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
+    """Whole-program fusion on TPC-H Q6: eager instruction-at-a-time engine
+    (one+ jax dispatch per instruction, ReduceSum round-trips to host) vs
+    the compiled program path (ONE dispatch per relation program)."""
+    from repro.core import engine as eng_mod
+    from repro.core import program as prog
+    from repro.db import database, queries, tpch
+
+    db = database.PimDatabase(tpch.generate(sf=sf, seed=0))
+    spec = queries.get_query("Q6")
+    rel = db.relations["lineitem"]
+    c, mask_reg, group_regs = db._compile_relation(
+        rel, spec, spec.filters["lineitem"])
+
+    cp = prog.compile_program(rel, c.program, mask_outputs=(mask_reg,))
+    prog.run_program(cp, rel)                # warm: compiles the one dispatch
+
+    def eager_once():
+        e = eng_mod.Engine(rel)
+        e.run(c.program)
+        return e.read_scalar(group_regs[0][1]["revenue"][1])
+
+    def fused_once():
+        r = prog.run_program(cp, rel)
+        return r.scalar(group_regs[0][1]["revenue"][1])
+
+    us_eager = _time(eager_once)
+    us_fused = _time(fused_once)
+    eager_val, fused_val = eager_once(), fused_once()
+
+    # Dispatch model: the eager engine issues >= 1 device computation per
+    # instruction (plus per-bit host sync inside every ReduceSum); the
+    # fused path is exactly one compiled call per relation program.
+    eager_disp = len(c.program)
+    fused_disp = cp.n_dispatches
+    return [("q6_program_fused_vs_eager", us_fused,
+             f"eager_us={us_eager:.0f};speedup={us_eager / us_fused:.2f};"
+             f"eager_dispatches={eager_disp};fused_dispatches={fused_disp};"
+             f"dispatch_reduction={eager_disp / fused_disp:.0f}x;"
+             f"paper_cycles={cp.paper_cycles()};"
+             f"exact={int(eager_val) == fused_val};"
+             f"peak_live_planes={cp.peak_live_planes};"
+             f"total_reg_planes={cp.total_reg_planes}")]

@@ -269,6 +269,7 @@ class Engine:
         self.backend = backend
         self.masks: Dict[str, jnp.ndarray] = {"__valid__": relation.valid}
         self.derived: Dict[str, jnp.ndarray] = {}
+        self.found: Dict[str, bool] = {}     # ReduceMinMax empty-selection flags
         self.trace: List[isa.PimInstruction] = []
         if backend == "pallas":
             from repro.kernels import ops as kops   # lazy; optional path
@@ -385,6 +386,7 @@ class Engine:
             fn = reduce_max if instr.is_max else reduce_min
             v, found = fn(self._planes(instr.attr), self.masks[instr.mask])
             self.derived[instr.dest] = v
+            self.found[instr.dest] = found
         elif kind == "ColumnTransform":
             # In the bit-plane layout the mask is already packed row-wise:
             # the transform is the readout itself. Kept as a traced no-op so
@@ -404,6 +406,13 @@ class Engine:
 
     def read_scalar(self, name: str):
         return np.asarray(self.derived[name])
+
+    def read_reduce(self, name: str) -> Optional[int]:
+        """Reduce result as a Python int; None for MIN/MAX over an empty
+        selection (the `found` flag of ReduceMinMax, dropped pre-fix)."""
+        if not self.found.get(name, True):
+            return None
+        return int(np.asarray(self.derived[name]))
 
     def count(self, mask: str):
         return int(reduce_count(self.masks[mask] & self.rel.valid))

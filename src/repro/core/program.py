@@ -1,0 +1,534 @@
+"""Program-level fused execution: one compiled pass per relation program.
+
+The eager :class:`~repro.core.engine.Engine` executes one ISA instruction
+at a time — every predicate re-reads its bit-planes from memory and every
+``ReduceSum`` round-trips through Python ints. The paper's whole point
+(PIMDB §4, Algorithm 1) is the opposite: the *entire* compiled filter
+program runs inside the array with a single result readout.
+
+This module is the TPU analogue of that: :func:`compile_program` takes the
+full ``isa.PimInstruction`` list a :class:`~repro.db.compiler.Compiler`
+emits for one relation (predicate DAG + valid-AND + aggregates), performs
+register liveness / plane-reuse analysis, and lowers it into a single
+``jax.jit``-compiled function. Each query then makes **one** pass over the
+touched planes per relation; masked per-bit popcounts for every aggregate
+come back from the same dispatch, and only the final exact 2^b weighting
+(arbitrary-precision) happens in host Python.
+
+Backends:
+
+* ``backend="jnp"``    — the whole program traced as one jnp graph.
+* ``backend="pallas"`` — the predicate DAG + popcount reduces run inside
+  one Pallas kernel (``repro.kernels.program``) streaming
+  ``(n_bits, BLOCK_W)`` tiles; MIN/MAX narrowing (inherently a multi-pass
+  global reduction) stays in the surrounding jit.
+
+The eager engine is unchanged and remains the oracle for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitslice, isa
+from . import engine as eng
+
+U32 = jnp.uint32
+_FULL = np.uint32(0xFFFFFFFF)
+
+_REDUCE_KINDS = ("ReduceSum", "ReduceMinMax")
+_DERIVED_KINDS = ("AddImm", "Add", "Subtract", "Multiply")
+
+
+# --------------------------------------------------------------------------
+# Static analysis: operand reads, register kinds, liveness
+# --------------------------------------------------------------------------
+def instruction_reads(ins: isa.PimInstruction) -> List[str]:
+    """Register/attribute names an instruction reads, in operand order."""
+    k = ins.kind
+    if k in ("EqualImm", "NotEqualImm", "LessThanImm", "GreaterThanImm",
+             "AddImm"):
+        return [ins.attr]
+    if k in ("Equal", "LessThan", "Add", "Subtract"):
+        return [ins.attr_a, ins.attr_b]
+    if k == "Multiply":
+        return [ins.attr_a] + ([ins.attr_b] if ins.attr_b else [])
+    if k in ("BitwiseAnd", "BitwiseOr"):
+        return [ins.src_a, ins.src_b]
+    if k == "BitwiseNot":
+        return [ins.src]
+    if k == "SetReset":
+        return []
+    if k in _REDUCE_KINDS:
+        return [ins.attr, ins.mask]
+    if k == "ColumnTransform":
+        return [ins.mask]
+    raise ValueError(f"unknown instruction {k}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramAnalysis:
+    """Liveness / plane-usage facts about one instruction program."""
+    source_attrs: Tuple[str, ...]          # relation attributes read
+    reg_kind: Mapping[str, str]            # register -> mask|derived|scalar
+    widths: Mapping[str, int]              # register -> planes it occupies
+    last_use: Mapping[str, int]            # register -> last reading instr
+    peak_live_planes: int                  # max simultaneously-live planes
+    total_reg_planes: int                  # planes if nothing were freed
+
+    def width_of(self, name: str, relation: "eng.PimRelation") -> int:
+        if name in self.widths:
+            return self.widths[name]
+        return relation.width_of(name)
+
+
+def analyze_program(instrs: Sequence[isa.PimInstruction],
+                    relation: eng.PimRelation,
+                    keep: Sequence[str] = ()) -> ProgramAnalysis:
+    """Classify registers, find source attributes, compute liveness.
+
+    ``keep`` registers are pinned live through the end of the program
+    (the outputs the caller will read).
+    """
+    reg_kind: Dict[str, str] = {"__valid__": "mask"}
+    widths: Dict[str, int] = {"__valid__": 1}
+    last_use: Dict[str, int] = {}
+    source: List[str] = []
+    for i, ins in enumerate(instrs):
+        for r in instruction_reads(ins):
+            if r in reg_kind:
+                last_use[r] = i
+            else:
+                if r not in relation.planes:
+                    raise KeyError(
+                        f"instruction {i} ({ins.kind}) reads '{r}' which is "
+                        f"neither a prior dest nor a relation attribute")
+                if r not in source:
+                    source.append(r)
+        k = ins.kind
+        if k in _REDUCE_KINDS:
+            reg_kind[ins.dest] = "scalar"
+            widths[ins.dest] = 0
+        elif k in _DERIVED_KINDS:
+            reg_kind[ins.dest] = "derived"
+            widths[ins.dest] = ins.n_bits
+        elif k == "BitwiseNot" and reg_kind.get(ins.src) != "mask":
+            # Attribute NOT (the imm - attr path): multi-plane result.
+            reg_kind[ins.dest] = "derived"
+            widths[ins.dest] = ins.n_bits
+        else:
+            reg_kind[ins.dest] = "mask"
+            widths[ins.dest] = 1
+    for r in keep:
+        last_use[r] = len(instrs)
+
+    # Peak live planes: forward sweep, registers die after their last use.
+    live: Dict[str, int] = {}
+    peak = 0
+    for i, ins in enumerate(instrs):
+        if reg_kind.get(ins.dest) != "scalar":
+            live[ins.dest] = widths[ins.dest]
+        peak = max(peak, sum(live.values()))
+        for r in instruction_reads(ins):
+            if r in live and last_use.get(r) == i:
+                del live[r]
+    total = sum(w for n, w in widths.items() if n != "__valid__")
+    return ProgramAnalysis(tuple(source), reg_kind, widths, last_use,
+                           peak, total)
+
+
+# --------------------------------------------------------------------------
+# Shared evaluator for the non-reduce ISA subset
+# --------------------------------------------------------------------------
+class BitwiseEvaluator:
+    """Executes the bitwise/arithmetic ISA subset on jnp values.
+
+    Works identically on full-width planes (the fused jnp trace) and on
+    one VMEM tile inside the Pallas program kernel — the per-immediate op
+    specialisation (Algorithm 1) happens at trace time either way.
+    Reduces are the caller's job. Mirrors ``Engine.execute`` semantics
+    bit-for-bit, including unrepresentable-immediate short-circuits.
+    """
+
+    def __init__(self, plane_source: Callable[[str], jnp.ndarray],
+                 valid: jnp.ndarray):
+        self._source = plane_source
+        self.masks: Dict[str, jnp.ndarray] = {"__valid__": valid}
+        self.derived: Dict[str, jnp.ndarray] = {}
+        self._shape = valid.shape
+        self.freed = 0
+
+    def planes(self, name: str) -> jnp.ndarray:
+        if name in self.derived:
+            return self.derived[name]
+        if name in self.masks:
+            return self.masks[name][None]
+        return self._source(name)
+
+    def free(self, name: str) -> None:
+        """Drop a dead register so XLA/Mosaic can reuse its planes."""
+        if name == "__valid__":
+            return
+        if self.derived.pop(name, None) is not None:
+            self.freed += 1
+        elif self.masks.pop(name, None) is not None:
+            self.freed += 1
+
+    def execute(self, instr: isa.PimInstruction) -> None:
+        kind = instr.kind
+        if kind == "EqualImm":
+            p = self.planes(instr.attr)
+            if instr.imm >= (1 << p.shape[0]):
+                self.masks[instr.dest] = jnp.zeros(self._shape, U32)
+            else:
+                self.masks[instr.dest] = eng.eq_imm_planes(p, instr.imm)
+        elif kind == "NotEqualImm":
+            p = self.planes(instr.attr)
+            if instr.imm >= (1 << p.shape[0]):
+                self.masks[instr.dest] = jnp.full(self._shape, _FULL, U32)
+            else:
+                self.masks[instr.dest] = ~eng.eq_imm_planes(p, instr.imm)
+        elif kind == "LessThanImm":
+            p = self.planes(instr.attr)
+            if instr.imm >= (1 << p.shape[0]):
+                self.masks[instr.dest] = jnp.full(self._shape, _FULL, U32)
+            else:
+                lt, eq = eng.cmp_imm_planes(p, instr.imm)
+                self.masks[instr.dest] = (lt | eq) if instr.or_equal else lt
+        elif kind == "GreaterThanImm":
+            p = self.planes(instr.attr)
+            if instr.imm >= (1 << p.shape[0]):
+                self.masks[instr.dest] = jnp.zeros(self._shape, U32)
+            else:
+                lt, eq = eng.cmp_imm_planes(p, instr.imm)
+                self.masks[instr.dest] = ~lt if instr.or_equal else ~(lt | eq)
+        elif kind == "Equal":
+            _, eq = eng.cmp_planes(self.planes(instr.attr_a),
+                                   self.planes(instr.attr_b))
+            self.masks[instr.dest] = eq
+        elif kind == "LessThan":
+            lt, eq = eng.cmp_planes(self.planes(instr.attr_a),
+                                    self.planes(instr.attr_b))
+            self.masks[instr.dest] = (lt | eq) if instr.or_equal else lt
+        elif kind == "BitwiseAnd":
+            self.masks[instr.dest] = (self.masks[instr.src_a]
+                                      & self.masks[instr.src_b])
+        elif kind == "BitwiseOr":
+            self.masks[instr.dest] = (self.masks[instr.src_a]
+                                      | self.masks[instr.src_b])
+        elif kind == "BitwiseNot":
+            if instr.src in self.masks:
+                self.masks[instr.dest] = ~self.masks[instr.src]
+            else:
+                p = self.planes(instr.src)
+                w = instr.n_bits
+                if p.shape[0] < w:
+                    pad = jnp.zeros((w - p.shape[0],) + p.shape[1:], U32)
+                    p = jnp.concatenate([p, pad], axis=0)
+                self.derived[instr.dest] = ~p[:w]
+        elif kind == "SetReset":
+            fill = _FULL if instr.value else np.uint32(0)
+            self.masks[instr.dest] = jnp.full(self._shape, fill, U32)
+        elif kind == "AddImm":
+            self.derived[instr.dest] = eng.add_imm_planes(
+                self.planes(instr.attr), instr.imm, instr.n_bits)
+        elif kind == "Add":
+            self.derived[instr.dest] = eng.add_planes(
+                self.planes(instr.attr_a), self.planes(instr.attr_b),
+                instr.n_bits)
+        elif kind == "Subtract":
+            self.derived[instr.dest] = eng.sub_planes(
+                self.planes(instr.attr_a), self.planes(instr.attr_b),
+                instr.n_bits)
+        elif kind == "Multiply":
+            if instr.imm is not None:
+                self.derived[instr.dest] = eng.mul_imm_planes(
+                    self.planes(instr.attr_a), instr.imm, instr.n_bits)
+            else:
+                self.derived[instr.dest] = eng.mul_planes(
+                    self.planes(instr.attr_a), self.planes(instr.attr_b),
+                    instr.n_bits)
+        elif kind == "ColumnTransform":
+            self.masks[instr.dest] = self.masks[instr.mask]
+        else:
+            raise ValueError(f"non-bitwise instruction {kind} "
+                             "must be handled by the caller")
+
+
+def _reduce_sum_bits_vec(planes: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked per-bit popcounts, vectorised over the bit axis: one fused
+    (n_bits, W) op instead of n_bits separate chains. Same int32 result as
+    ``engine.reduce_sum_bits`` but keeps the traced graph O(1) per reduce —
+    the eager oracle keeps the per-bit form."""
+    return jnp.sum(eng.popcount_u32(planes & mask[None]).astype(jnp.int32),
+                   axis=tuple(range(1, planes.ndim)))
+
+
+def _reduce_minmax_bits(planes: jnp.ndarray, mask: jnp.ndarray,
+                        is_max: bool):
+    """Traceable MSB-first narrowing. Returns ((n_bits,) int32 result bits
+    LSB-first, found:bool) — the host assembles the exact value, and maps
+    found=False (empty selection) to None."""
+    n_bits = planes.shape[0]
+    cand = mask
+    bits: List[jnp.ndarray] = [None] * n_bits  # type: ignore[list-item]
+    for b in range(n_bits - 1, -1, -1):
+        if is_max:
+            t = cand & planes[b]
+            has = jnp.any(t != 0)
+            bits[b] = has.astype(jnp.int32)
+            cand = jnp.where(has, t, cand & ~planes[b])
+        else:
+            t = cand & ~planes[b]
+            has = jnp.any(t != 0)
+            bits[b] = jnp.logical_not(has).astype(jnp.int32)
+            cand = jnp.where(has, t, cand & planes[b])
+    return jnp.stack(bits), jnp.any(mask != 0)
+
+
+def _dependency_slice(instrs: Sequence[isa.PimInstruction],
+                      upto: int, targets: Sequence[str]) -> List[int]:
+    """Indices of the non-reduce instructions (before ``upto``) needed to
+    materialise ``targets`` — the recompute set for MIN/MAX operands the
+    Pallas kernel doesn't export."""
+    needed = set(targets)
+    picked: List[int] = []
+    for i in range(upto - 1, -1, -1):
+        ins = instrs[i]
+        if ins.kind in _REDUCE_KINDS:
+            continue
+        if ins.dest in needed:
+            picked.append(i)
+            needed.discard(ins.dest)
+            needed.update(instruction_reads(ins))
+    return picked[::-1]
+
+
+# --------------------------------------------------------------------------
+# compile_program / run_program
+# --------------------------------------------------------------------------
+# Jitted executables keyed by the full static program signature, so
+# recompiling the same query against the same layout reuses the XLA build
+# (PimDatabase constructs a fresh Compiler per run).
+_FN_CACHE: Dict[tuple, Callable] = {}
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """A relation program lowered to one jit-compiled dispatch."""
+    instrs: Tuple[isa.PimInstruction, ...]
+    mask_outputs: Tuple[str, ...]
+    scalar_kinds: Dict[str, tuple]         # dest -> ("sum",)|("minmax",)
+    analysis: ProgramAnalysis
+    backend: str
+    n_words: int
+    _fn: Callable                          # (planes dict, valid) -> raw out
+
+    @property
+    def n_dispatches(self) -> int:
+        """Device dispatches per execution — the fusion headline."""
+        return 1
+
+    @property
+    def peak_live_planes(self) -> int:
+        return self.analysis.peak_live_planes
+
+    @property
+    def total_reg_planes(self) -> int:
+        return self.analysis.total_reg_planes
+
+    def paper_cycles(self) -> int:
+        return sum(i.cycles() for i in self.instrs)
+
+
+class ProgramResult:
+    """Outputs of one fused dispatch; exact host-side finalisation."""
+
+    def __init__(self, cp: CompiledProgram, raw: Dict[str, dict],
+                 n_records: int):
+        self._cp = cp
+        self._raw = raw
+        self._n = n_records
+
+    def mask_packed(self, name: str) -> np.ndarray:
+        return np.asarray(self._raw["masks"][name])
+
+    def mask(self, name: str, n_records: Optional[int] = None) -> np.ndarray:
+        n = self._n if n_records is None else n_records
+        return bitslice.unpack_mask(self.mask_packed(name), n)
+
+    def scalar(self, name: str) -> Optional[int]:
+        kind = self._cp.scalar_kinds[name][0]
+        if kind == "sum":
+            pcs = np.asarray(self._raw["sums"][name])
+            return sum(int(pcs[b]) << b for b in range(pcs.shape[0]))
+        if kind == "minmax":
+            if not bool(np.asarray(self._raw["mm_found"][name])):
+                return None
+            bits = np.asarray(self._raw["mm_bits"][name])
+            return sum(int(bits[b]) << b for b in range(bits.shape[0]))
+        raise KeyError(name)
+
+
+def compile_program(relation: eng.PimRelation,
+                    program: Sequence[isa.PimInstruction],
+                    mask_outputs: Sequence[str] = (),
+                    backend: str = "jnp",
+                    interpret: Optional[bool] = None) -> CompiledProgram:
+    """Lower a whole relation program into a single jit-compiled function.
+
+    ``mask_outputs`` names the mask registers the host will read; every
+    reduce destination automatically becomes a scalar output. Liveness
+    analysis drops dead registers during tracing so XLA sees the true
+    (smaller) live-plane working set.
+    """
+    instrs = tuple(program)
+    mask_outputs = tuple(mask_outputs)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    scalar_kinds: Dict[str, tuple] = {}
+    for ins in instrs:
+        if ins.kind == "ReduceSum":
+            scalar_kinds[ins.dest] = ("sum",)
+        elif ins.kind == "ReduceMinMax":
+            scalar_kinds[ins.dest] = ("minmax", ins.is_max)
+    analysis = analyze_program(instrs, relation, keep=mask_outputs)
+    widths = {a: relation.width_of(a) for a in analysis.source_attrs}
+
+    sig = (instrs, mask_outputs, backend, interpret, relation.name,
+           relation.layout.n_words, tuple(sorted(widths.items())))
+    fn = _FN_CACHE.get(sig)
+    if fn is None:
+        if backend == "pallas":
+            fn = _build_pallas_fn(instrs, mask_outputs, analysis, widths,
+                                  interpret)
+        else:
+            fn = _build_jnp_fn(instrs, mask_outputs, analysis)
+        fn = jax.jit(fn)
+        _FN_CACHE[sig] = fn
+
+    return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
+                           backend, relation.layout.n_words, fn)
+
+
+def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult:
+    """Execute a compiled program: ONE device dispatch for the whole
+    relation program, then exact host-side weighting of the popcounts."""
+    planes = {a: relation.planes[a] for a in cp.analysis.source_attrs}
+    raw = cp._fn(planes, relation.valid)
+    return ProgramResult(cp, jax.device_get(raw), relation.n_records)
+
+
+# --------------------------------------------------------------------------
+# Backend lowerings
+# --------------------------------------------------------------------------
+def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis):
+    keep = set(mask_outputs)
+
+    def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
+        ev = BitwiseEvaluator(lambda a: planes[a], valid)
+        sums: Dict[str, jnp.ndarray] = {}
+        mm_bits: Dict[str, jnp.ndarray] = {}
+        mm_found: Dict[str, jnp.ndarray] = {}
+        for i, ins in enumerate(instrs):
+            if ins.kind == "ReduceSum":
+                sums[ins.dest] = _reduce_sum_bits_vec(
+                    ev.planes(ins.attr), ev.masks[ins.mask])
+            elif ins.kind == "ReduceMinMax":
+                bits, found = _reduce_minmax_bits(
+                    ev.planes(ins.attr), ev.masks[ins.mask], ins.is_max)
+                mm_bits[ins.dest] = bits
+                mm_found[ins.dest] = found
+            else:
+                ev.execute(ins)
+            for r in instruction_reads(ins):
+                if analysis.last_use.get(r) == i and r not in keep:
+                    ev.free(r)
+        return {"masks": {m: ev.masks[m] for m in mask_outputs},
+                "sums": sums, "mm_bits": mm_bits, "mm_found": mm_found}
+
+    return _run
+
+
+def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
+                     widths: Dict[str, int], interpret: bool):
+    from repro.kernels import program as kprog  # lazy: optional path
+
+    # Popcount jobs, in program order: one (mask, attr, bit) per output
+    # column of the kernel's partial-sum matrix.
+    pc_jobs: List[Tuple[str, str, int]] = []
+    pc_slices: Dict[str, Tuple[int, int]] = {}
+    sum_slices: List[Tuple[int, int]] = []
+    mm_list: List[isa.PimInstruction] = []
+    for ins in instrs:
+        if ins.kind == "ReduceSum":
+            w = analysis.widths.get(ins.attr, widths.get(ins.attr, ins.n_bits))
+            if analysis.reg_kind.get(ins.attr) == "mask":
+                w = 1
+            start = len(pc_jobs)
+            pc_jobs.extend((ins.mask, ins.attr, b) for b in range(w))
+            pc_slices[ins.dest] = (start, len(pc_jobs))
+            sum_slices.append((start, len(pc_jobs)))
+        elif ins.kind == "ReduceMinMax":
+            mm_list.append(ins)
+
+    # The kernel must export every mask MIN/MAX narrows with, and the host
+    # recomputes (full-width, inside the same jit) any derived operand.
+    kernel_masks = list(mask_outputs)
+    for ins in mm_list:
+        if ins.mask not in kernel_masks:
+            kernel_masks.append(ins.mask)
+    kernel_masks_t = tuple(kernel_masks)
+
+    # Sum operands stay live until their ReduceSum executes *in-kernel* at
+    # its original program position, so plain last_use liveness holds.
+    keep = set(kernel_masks_t)
+
+    def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
+        attr_rows: Dict[str, Tuple[int, int]] = {}
+        rows = []
+        r0 = 0
+        for a in analysis.source_attrs:
+            p = planes[a]
+            attr_rows[a] = (r0, r0 + p.shape[0])
+            rows.append(p)
+            r0 += p.shape[0]
+        rows.append(valid[None])
+        stacked = jnp.concatenate(rows, axis=0)
+        masks_arr, partials = kprog.fused_program(
+            stacked, instrs=instrs, attr_rows=attr_rows, valid_row=r0,
+            mask_outputs=kernel_masks_t, pc_jobs=tuple(pc_jobs),
+            sum_slices=tuple(sum_slices),
+            last_use=dict(analysis.last_use), keep=frozenset(keep),
+            interpret=interpret)
+        totals = jnp.sum(partials, axis=0, dtype=jnp.int32)
+        sums = {dest: totals[s:e] for dest, (s, e) in pc_slices.items()}
+
+        mm_bits: Dict[str, jnp.ndarray] = {}
+        mm_found: Dict[str, jnp.ndarray] = {}
+        for ins in mm_list:
+            mask = masks_arr[kernel_masks_t.index(ins.mask)]
+            if ins.attr in analysis.source_attrs:
+                p = planes[ins.attr]
+            else:
+                # Recompute the derived operand full-width (rare: MIN/MAX
+                # over an arithmetic expression).
+                ev = BitwiseEvaluator(lambda a: planes[a], valid)
+                for k in _dependency_slice(instrs, len(instrs), [ins.attr]):
+                    ev.execute(instrs[k])
+                p = ev.planes(ins.attr)
+            bits, found = _reduce_minmax_bits(p, mask, ins.is_max)
+            mm_bits[ins.dest] = bits
+            mm_found[ins.dest] = found
+
+        out_masks = {m: masks_arr[kernel_masks_t.index(m)]
+                     for m in mask_outputs}
+        return {"masks": out_masks, "sums": sums,
+                "mm_bits": mm_bits, "mm_found": mm_found}
+
+    return _run

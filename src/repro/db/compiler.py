@@ -180,6 +180,12 @@ class Compiler:
             self.program.append(isa.BitwiseAnd(dest=m, src_a=m_lo, src_b=m_hi))
             return m
         if isinstance(p, InSet):
+            if not p.values:
+                # Empty IN-list: constant-false mask (previously returned
+                # None and crashed the enclosing BitwiseAnd).
+                m = self.fresh("m")
+                self.program.append(isa.SetReset(dest=m, value=0))
+                return m
             a, w = self.compile_expr(p.col)
             acc = None
             for v in p.values:
@@ -270,8 +276,9 @@ class Compiler:
     def compile_aggregates(self, mask: str, aggs: Sequence[Agg]) -> Dict[str, Tuple[str, str]]:
         """Aggregate program on a filter mask (paper full-query path).
 
-        Returns {agg name: (kind, register)} where kind is 'scalar' or
-        'avg_pair' (avg = host division of sum/count, §4.2).
+        Returns {agg name: (kind, register)} where kind is 'scalar',
+        'minmax' (may be empty -> None) or 'avg_pair' (avg = host division
+        of sum/count, §4.2).
         """
         out: Dict[str, Tuple[str, str]] = {}
         for agg in aggs:
@@ -299,7 +306,7 @@ class Compiler:
                 self.program.append(isa.ReduceMinMax(
                     dest=dest, attr=a, mask=mask, n_bits=w,
                     is_max=agg.op == "max"))
-                out[name] = ("scalar", dest)
+                out[name] = ("minmax", dest)
             else:
                 raise ValueError(agg.op)
         return out

@@ -1,7 +1,10 @@
 """PimDatabase: the PIM-resident database copy + query run harness.
 
 Runs a QuerySpec three ways:
-  * PIM engine (bit-sliced bulk-bitwise execution, jnp or pallas backend);
+  * fused PIM path (default): the whole per-relation instruction program
+    compiled into ONE jax dispatch (`core.program`) — the paper's
+    single-readout execution model;
+  * eager PIM engine (`fused=False`): instruction-at-a-time oracle;
   * numpy baseline (the paper's in-memory column-store scan, §5.5);
 and produces the paper-faithful cost report (cycles, read traffic, modeled
 latency/energy at any scale factor, including the paper's SF=1000).
@@ -17,6 +20,7 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core import engine as eng
 from repro.core import isa
+from repro.core import program as prog
 from . import queries as Q
 from . import schema as S
 from .compiler import Agg, And, Compiler, predicate_attrs
@@ -55,57 +59,96 @@ class PimDatabase:
                     name, cols, encodings=enc)
 
     # -- PIM execution ------------------------------------------------------
-    def run_pim(self, spec: Q.QuerySpec) -> QueryRun:
+    def _compile_relation(self, rel: eng.PimRelation, spec: Q.QuerySpec,
+                          pred) -> Tuple[Compiler, str, List[Tuple[str, Dict]]]:
+        """Compile the FULL program for one relation: filter, group masks,
+        aggregates. Returns (compiler, filter mask register,
+        [(group label, {agg name: (kind, reg)})])."""
+        c = Compiler(rel)
+        is_agg_rel = (spec.kind == "full" and rel.name == spec.agg_relation)
+        mask_reg = c.compile_filter(pred, with_transform=not is_agg_rel)
+        group_regs: List[Tuple[str, Dict]] = []
+        if is_agg_rel:
+            for label, gpred in (spec.groups or [("all", None)]):
+                if gpred is None:
+                    gmask = mask_reg
+                else:
+                    gm = c.compile_pred(gpred)
+                    gmask = c.fresh("m")
+                    c.program.append(isa.BitwiseAnd(
+                        dest=gmask, src_a=mask_reg, src_b=gm))
+                group_regs.append((label, c.compile_aggregates(
+                    gmask, spec.aggregates)))
+        return c, mask_reg, group_regs
+
+    @staticmethod
+    def _finalize_aggs(group_regs, read_scalar, read_reduce) -> Dict[str, Dict[str, object]]:
+        aggs: Dict[str, Dict[str, object]] = {}
+        for label, regs in group_regs:
+            out: Dict[str, object] = {}
+            for name, (kind, reg) in regs.items():
+                if kind == "avg_pair":
+                    s_reg, c_reg = reg.split("/")
+                    out[name] = (read_scalar(s_reg), read_scalar(c_reg))
+                elif kind == "minmax":
+                    out[name] = read_reduce(reg)
+                else:
+                    out[name] = read_scalar(reg)
+            aggs[label] = out
+        return aggs
+
+    def _relation_run(self, rel: eng.PimRelation, rel_name: str,
+                      spec: Q.QuerySpec, pred, mask: np.ndarray,
+                      trace: List[isa.PimInstruction]) -> RelationRun:
+        cols = self.tables[rel_name]
+        attrs = predicate_attrs(pred)
+        sels = _conjunct_selectivities(cols, pred, rel.n_records)
+        agg_bits: List[int] = []
+        if spec.kind == "full" and rel_name == spec.agg_relation:
+            for a in spec.aggregates:
+                if a.expr is not None:
+                    agg_bits += [rel.width_of(x)
+                                 for x in predicate_attrs_of_expr(a.expr)]
+        return RelationRun(
+            n_records=rel.n_records, mask=mask, trace=trace,
+            selectivity=float(mask.mean()) if mask.size else 0.0,
+            filter_attr_bits=[rel.width_of(a) for a in attrs],
+            filter_attr_sels=sels, agg_attr_bits=agg_bits)
+
+    def run_pim(self, spec: Q.QuerySpec, fused: bool = True) -> QueryRun:
+        """Execute a query on the PIM copy.
+
+        fused=True (default): one compiled dispatch per relation program —
+        the paper's single-pass/single-readout execution model.
+        fused=False: the eager instruction-at-a-time engine (oracle).
+        """
         t0 = time.perf_counter()
         rel_runs: Dict[str, RelationRun] = {}
         aggs: Dict[str, Dict[str, object]] = {}
         for rel_name, pred in spec.filters.items():
             rel = self.relations[rel_name]
-            cols = self.tables[rel_name]
-            c = Compiler(rel)
-            is_agg_rel = (spec.kind == "full" and rel_name == spec.agg_relation)
-            mask_reg = c.compile_filter(pred, with_transform=not is_agg_rel)
-            e = eng.Engine(rel, backend=self.backend)
-            pos = len(c.program)
-            e.run(c.program[:pos])
+            c, mask_reg, group_regs = self._compile_relation(rel, spec, pred)
 
-            if is_agg_rel:
-                groups = spec.groups or [("all", None)]
-                for label, gpred in groups:
-                    if gpred is None:
-                        gmask = mask_reg
-                    else:
-                        gm = c.compile_pred(gpred)
-                        gmask = c.fresh("m")
-                        c.program.append(isa.BitwiseAnd(
-                            dest=gmask, src_a=mask_reg, src_b=gm))
-                    regs = c.compile_aggregates(gmask, spec.aggregates)
-                    e.run(c.program[pos:])
-                    pos = len(c.program)
-                    out: Dict[str, object] = {}
-                    for name, (kind, reg) in regs.items():
-                        if kind == "avg_pair":
-                            s_reg, c_reg = reg.split("/")
-                            out[name] = (int(e.read_scalar(s_reg)),
-                                         int(e.read_scalar(c_reg)))
-                        else:
-                            out[name] = int(e.read_scalar(reg))
-                    aggs[label] = out
+            if fused:
+                cp = prog.compile_program(rel, c.program,
+                                          mask_outputs=(mask_reg,),
+                                          backend=self.backend)
+                res = prog.run_program(cp, rel)
+                if group_regs:
+                    aggs.update(self._finalize_aggs(
+                        group_regs, res.scalar, res.scalar))
+                mask = res.mask(mask_reg)
+            else:
+                e = eng.Engine(rel, backend=self.backend)
+                e.run(c.program)
+                if group_regs:
+                    aggs.update(self._finalize_aggs(
+                        group_regs,
+                        lambda r: int(e.read_scalar(r)), e.read_reduce))
+                mask = e.read_mask(mask_reg)[: rel.n_records]
 
-            mask = e.read_mask(mask_reg)[: rel.n_records]
-            attrs = predicate_attrs(pred)
-            sels = _conjunct_selectivities(cols, pred, rel.n_records)
-            agg_bits: List[int] = []
-            if is_agg_rel:
-                for a in spec.aggregates:
-                    if a.expr is not None:
-                        agg_bits += [rel.width_of(x)
-                                     for x in predicate_attrs_of_expr(a.expr)]
-            rel_runs[rel_name] = RelationRun(
-                n_records=rel.n_records, mask=mask, trace=list(e.trace),
-                selectivity=float(mask.mean()) if mask.size else 0.0,
-                filter_attr_bits=[rel.width_of(a) for a in attrs],
-                filter_attr_sels=sels, agg_attr_bits=agg_bits)
+            rel_runs[rel_name] = self._relation_run(
+                rel, rel_name, spec, pred, mask, list(c.program))
         return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
 
     # -- baseline (numpy scan oracle) ----------------------------------------

@@ -12,17 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .common import pick_block as _pick_block
+
 U32 = jnp.uint32
 BLOCK_W = 512   # words per grid step -> (BLOCK_W, 32) uint32 tile in VMEM
-
-
-def _pick_block(w: int, requested: int) -> int:
-    """Largest power-of-two block <= requested that divides w (w is always a
-    multiple of 1024 by the bitslice layout contract)."""
-    b = min(requested, w)
-    while w % b:
-        b //= 2
-    return max(b, 1)
 
 
 def _pack_kernel(bits_ref, out_ref):

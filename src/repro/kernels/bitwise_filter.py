@@ -21,18 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .common import pick_block as _pick_block
+
 U32 = jnp.uint32
 _FULL = np.uint32(0xFFFFFFFF)
 BLOCK_W = 2048
-
-
-def _pick_block(w: int, requested: int) -> int:
-    """Largest power-of-two block <= requested that divides w (w is always a
-    multiple of 1024 by the bitslice layout contract)."""
-    b = min(requested, w)
-    while w % b:
-        b //= 2
-    return max(b, 1)
 
 
 def _eq_imm_kernel(planes_ref, out_ref, *, imm: int, n_bits: int):

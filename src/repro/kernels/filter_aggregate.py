@@ -24,25 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from .common import pick_block as _pick_block, popcount as _popcount
+
 U32 = jnp.uint32
 _FULL = np.uint32(0xFFFFFFFF)
 BLOCK_W = 2048
-
-
-def _pick_block(w: int, requested: int) -> int:
-    """Largest power-of-two block <= requested that divides w (w is always a
-    multiple of 1024 by the bitslice layout contract)."""
-    b = min(requested, w)
-    while w % b:
-        b //= 2
-    return max(b, 1)
-
-
-def _popcount(v):
-    v = v - ((v >> 1) & np.uint32(0x55555555))
-    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
-    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
-    return (v * np.uint32(0x01010101)) >> 24
 
 
 def _fused_kernel(fplanes_ref, aplanes_ref, valid_ref, out_ref, *,

@@ -64,7 +64,7 @@ def run_cell(arch: str, shape_name: str, multipod: bool,
         lowered = bundle.fn.lower(*bundle.args)
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = R.cost_analysis_dict(compiled)
     coll = R.collective_bytes(compiled.as_text())
     bytes_per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes +
                      ma.output_size_in_bytes - ma.alias_size_in_bytes)

@@ -87,8 +87,20 @@ class CellCosts:
                          cb)
 
 
-def costs_of(compiled) -> CellCosts:
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalise Compiled.cost_analysis() across jax versions.
+
+    jax <= 0.4.33 returns a dict; 0.4.37 returns a list with one dict per
+    computation (usually length 1). Accept both and always hand back a dict.
+    """
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def costs_of(compiled) -> CellCosts:
+    ca = cost_analysis_dict(compiled)
     return CellCosts(float(ca.get("flops", 0.0)),
                      float(ca.get("bytes accessed", 0.0)),
                      collective_bytes(compiled.as_text()))

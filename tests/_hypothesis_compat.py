@@ -1,0 +1,69 @@
+"""`hypothesis` if installed, else a tiny deterministic fallback.
+
+The test image does not ship `hypothesis` (see requirements-dev.txt for the
+pinned version used in CI). To keep the property tests running everywhere,
+this module re-exports the real library when available and otherwise
+provides a minimal drop-in: `given` enumerates a fixed number of
+pseudo-random examples from a seeded PRNG, so failures reproduce exactly.
+
+Only the API surface the test-suite uses is implemented:
+  @settings(max_examples=N, deadline=None)
+  @given(st.integers(lo, hi), st.sampled_from(seq), st.booleans())
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 12  # bound runtime; hypothesis explores more
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example_from(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: rng.choice(items))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                n = min(getattr(run, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(f"seed:{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = tuple(s.example_from(rng) for s in strategies)
+                    fn(*args, *drawn, **kwargs)
+            # pytest must see a zero-arg signature, not the wrapped one —
+            # otherwise the drawn parameters look like missing fixtures.
+            del run.__wrapped__
+            return run
+        return deco

@@ -1,7 +1,7 @@
 """Bit-plane layout: pack/unpack roundtrips (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bitslice
 

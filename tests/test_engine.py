@@ -1,6 +1,6 @@
 """Bulk-bitwise engine vs numpy oracle (property-based)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import engine, isa
 
