@@ -34,12 +34,17 @@ def _setup():
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)                      # compile/warm
+    """(cold_us, warm_us): first call — which pays XLA compilation — timed
+    separately from the steady-state average, so the bench trajectory is
+    not dominated by compile noise."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    cold = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(reps):
         r = fn(*args)
     jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / reps * 1e6
+    return cold, (time.perf_counter() - t0) / reps * 1e6
 
 
 def run_benches() -> List[Tuple[str, float, str]]:
@@ -49,19 +54,19 @@ def run_benches() -> List[Tuple[str, float, str]]:
 
     # bit-sliced range filter (jnp path of the Pallas kernel)
     range_jit = jax.jit(lambda p: ref.predicate_range(p, lo, hi))
-    us_bit = _time(range_jit, kp)
+    cold_bit, us_bit = _time(range_jit, kp)
     # numpy full-width baseline scan
     t0 = time.perf_counter()
     for _ in range(5):
         base = (key >= lo) & (key < hi)
     us_np = (time.perf_counter() - t0) / 5 * 1e6
     rows.append(("kernel_range_filter_bitsliced", us_bit,
-                 f"records_per_us={N/us_bit:.0f};numpy_us={us_np:.0f};"
-                 f"bytes_touched={16*N/8}"))
+                 f"records_per_us={N/us_bit:.0f};cold_us={cold_bit:.0f};"
+                 f"numpy_us={us_np:.0f};bytes_touched={16*N/8}"))
 
     # fused filter+aggregate vs two-phase
     fused = jax.jit(lambda f, a, v: ref.filter_agg_popcounts(f, a, lo, hi, v))
-    us_fused = _time(fused, kp, vp, valid)
+    cold_fused, us_fused = _time(fused, kp, vp, valid)
 
     def two_phase(f, a, v):
         mask = ref.predicate_range(f, lo, hi) & v
@@ -69,14 +74,14 @@ def run_benches() -> List[Tuple[str, float, str]]:
                for b in range(a.shape[0])]
         return jnp.stack(pcs)
     two = jax.jit(two_phase)
-    us_two = _time(two, kp, vp, valid)
+    _, us_two = _time(two, kp, vp, valid)
     sel = (key >= lo) & (key < hi)
     want = int(val[sel].sum())
     got_vec = np.asarray(fused(kp, vp, valid))
     got = sum(int(got_vec[b + 1]) << b for b in range(12))
     rows.append(("kernel_fused_filter_agg", us_fused,
                  f"two_phase_us={us_two:.0f};fusion_speedup={us_two/us_fused:.2f};"
-                 f"exact={got == want}"))
+                 f"cold_us={cold_fused:.0f};exact={got == want}"))
 
     # packed mask readout (column-transform analogue): bytes host must read
     rows.append(("readout_reduction", 0.0,
@@ -101,7 +106,6 @@ def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
         rel, spec, spec.filters["lineitem"])
 
     cp = prog.compile_program(rel, c.program, mask_outputs=(mask_reg,))
-    prog.run_program(cp, rel)                # warm: compiles the one dispatch
 
     def eager_once():
         e = eng_mod.Engine(rel)
@@ -112,8 +116,8 @@ def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
         r = prog.run_program(cp, rel)
         return r.scalar(group_regs[0][1]["revenue"][1])
 
-    us_eager = _time(eager_once)
-    us_fused = _time(fused_once)
+    _, us_eager = _time(eager_once)
+    cold_fused, us_fused = _time(fused_once)   # cold = the one XLA compile
     eager_val, fused_val = eager_once(), fused_once()
 
     # Dispatch model: the eager engine issues >= 1 device computation per
@@ -121,11 +125,45 @@ def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
     # fused path is exactly one compiled call per relation program.
     eager_disp = len(c.program)
     fused_disp = cp.n_dispatches
-    return [("q6_program_fused_vs_eager", us_fused,
+    rows = [("q6_program_fused_vs_eager", us_fused,
              f"eager_us={us_eager:.0f};speedup={us_eager / us_fused:.2f};"
+             f"cold_compile_us={cold_fused:.0f};"
              f"eager_dispatches={eager_disp};fused_dispatches={fused_disp};"
              f"dispatch_reduction={eager_disp / fused_disp:.0f}x;"
              f"paper_cycles={cp.paper_cycles()};"
              f"exact={int(eager_val) == fused_val};"
              f"peak_live_planes={cp.peak_live_planes};"
              f"total_reg_planes={cp.total_reg_planes}")]
+    rows.extend(bench_distributed_program(db, spec))
+    return rows
+
+
+def bench_distributed_program(db, spec) -> List[Tuple[str, float, str]]:
+    """Sharded fused execution over all local devices (paper §4 scale-out:
+    one request broadcast to every module, psum host-combine). Skipped —
+    with a note row — on single-device hosts and on device counts that do
+    not divide the relation's packed word count."""
+    from repro.core import program as prog
+
+    n_dev = len(jax.devices())
+    rel = db.relations["lineitem"]
+    if n_dev < 2 or rel.layout.n_words % n_dev:
+        return [("q6_program_distributed", 0.0,
+                 f"skipped=need_dividing_multi_device;devices={n_dev};"
+                 f"n_words={rel.layout.n_words};hint=set XLA_FLAGS="
+                 "--xla_force_host_platform_device_count=8")]
+    mesh = jax.make_mesh((1, n_dev), ("pod", "data"))
+    rel = rel.shard(mesh)                    # reuse the already-built planes
+    c, mask_reg, group_regs = db._compile_relation(
+        rel, spec, spec.filters["lineitem"])
+    cp = prog.compile_program(rel, c.program, mask_outputs=(mask_reg,),
+                              mesh=mesh)
+
+    def dist_once():
+        r = prog.run_program(cp, rel)
+        return r.scalar(group_regs[0][1]["revenue"][1])
+
+    cold, warm = _time(dist_once)
+    return [("q6_program_distributed", warm,
+             f"cold_compile_us={cold:.0f};devices={n_dev};"
+             f"shards={cp.n_shards};dispatches={cp.n_dispatches}")]

@@ -255,6 +255,19 @@ class PimRelation:
     def bytes_resident(self) -> int:
         return sum(int(p.size) * 4 for p in self.planes.values()) + self.valid.size * 4
 
+    def shard(self, mesh, shard_axes=None) -> "PimRelation":
+        """Return a copy with every bit-plane (and the valid plane) placed
+        word-axis-sharded over ``shard_axes`` of ``mesh`` — the paper's
+        pages-across-modules placement. The word count is always a multiple
+        of ``TILE_WORDS`` (1024), so any power-of-two device count divides
+        it evenly."""
+        from . import distributed as dist   # lazy: avoids import cycle
+        ax = dist.mesh_shard_axes(mesh, shard_axes)
+        planes = {a: dist.shard_relation_planes(p, mesh, ax)
+                  for a, p in self.planes.items()}
+        valid = dist.shard_relation_planes(self.valid, mesh, ax)
+        return dataclasses.replace(self, planes=planes, valid=valid)
+
 
 class Engine:
     """Executes PIM instruction sequences on a PimRelation.

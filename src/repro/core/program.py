@@ -27,12 +27,16 @@ The eager engine is unchanged and remains the oracle for tests.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
+import threading
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from . import bitslice, isa
 from . import engine as eng
@@ -311,15 +315,82 @@ def _dependency_slice(instrs: Sequence[isa.PimInstruction],
 # --------------------------------------------------------------------------
 # compile_program / run_program
 # --------------------------------------------------------------------------
-# Jitted executables keyed by the full static program signature, so
-# recompiling the same query against the same layout reuses the XLA build
-# (PimDatabase constructs a fresh Compiler per run).
-_FN_CACHE: Dict[tuple, Callable] = {}
+class LruFnCache:
+    """Bounded LRU of jitted executables keyed by the full static program
+    signature, so recompiling the same query against the same layout reuses
+    the XLA build (PimDatabase constructs a fresh Compiler per run).
+
+    Bounded because the key includes the full instruction tuple: a
+    long-lived serving process answering ad-hoc queries would otherwise
+    accumulate compiled executables without limit. Evicting an entry drops
+    the jitted callable (and, transitively, XLA's hold on the executable);
+    re-requesting an evicted signature simply recompiles.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self._data: "collections.OrderedDict[tuple, Callable]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: tuple) -> Optional[Callable]:
+        with self._lock:
+            fn = self._data.get(key)
+            if fn is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return fn
+
+    def put(self, key: tuple, fn: Callable) -> None:
+        with self._lock:
+            self._data[key] = fn
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def set_capacity(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        with self._lock:
+            self.capacity = capacity
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+_FN_CACHE = LruFnCache(
+    capacity=int(os.environ.get("REPRO_PROGRAM_CACHE_CAPACITY", "128")))
+
+
+def set_program_cache_capacity(capacity: int) -> None:
+    """Resize the compiled-executable LRU (evicts oldest entries now)."""
+    _FN_CACHE.set_capacity(capacity)
 
 
 @dataclasses.dataclass
 class CompiledProgram:
-    """A relation program lowered to one jit-compiled dispatch."""
+    """A relation program lowered to one jit-compiled dispatch.
+
+    With ``mesh`` set the dispatch is the shard_map-wrapped SPMD
+    executable: planes sharded along the word axis, per-shard popcount
+    partials psum-combined, MIN/MAX candidates gathered + combined —
+    still ONE logical dispatch per relation program.
+    """
     instrs: Tuple[isa.PimInstruction, ...]
     mask_outputs: Tuple[str, ...]
     scalar_kinds: Dict[str, tuple]         # dest -> ("sum",)|("minmax",)
@@ -327,11 +398,23 @@ class CompiledProgram:
     backend: str
     n_words: int
     _fn: Callable                          # (planes dict, valid) -> raw out
+    mesh: Optional[Mesh] = None
+    shard_axes: Optional[Tuple[str, ...]] = None
 
     @property
     def n_dispatches(self) -> int:
         """Device dispatches per execution — the fusion headline."""
         return 1
+
+    @property
+    def n_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = 1
+        for a in (self.shard_axes or ()):
+            out *= sizes[a]
+        return out
 
     @property
     def peak_live_planes(self) -> int:
@@ -378,13 +461,23 @@ def compile_program(relation: eng.PimRelation,
                     program: Sequence[isa.PimInstruction],
                     mask_outputs: Sequence[str] = (),
                     backend: str = "jnp",
-                    interpret: Optional[bool] = None) -> CompiledProgram:
+                    interpret: Optional[bool] = None,
+                    mesh: Optional[Mesh] = None,
+                    shard_axes: Optional[Sequence[str]] = None
+                    ) -> CompiledProgram:
     """Lower a whole relation program into a single jit-compiled function.
 
     ``mask_outputs`` names the mask registers the host will read; every
     reduce destination automatically becomes a scalar output. Liveness
     analysis drops dead registers during tracing so XLA sees the true
     (smaller) live-plane working set.
+
+    With ``mesh`` the compiled function is wrapped in ``shard_map`` over
+    ``shard_axes`` (default: every mesh axis): bit-planes shard along the
+    word axis, result masks stay sharded, popcount partials combine via
+    psum and MIN/MAX via a cross-shard candidate combine — see
+    ``core.distributed.shard_program_fn``. Execution stays one logical
+    dispatch per relation program.
     """
     instrs = tuple(program)
     mask_outputs = tuple(mask_outputs)
@@ -400,8 +493,13 @@ def compile_program(relation: eng.PimRelation,
     analysis = analyze_program(instrs, relation, keep=mask_outputs)
     widths = {a: relation.width_of(a) for a in analysis.source_attrs}
 
+    if mesh is not None:
+        from . import distributed as dist  # lazy: avoids import cycle
+        shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
+
     sig = (instrs, mask_outputs, backend, interpret, relation.name,
-           relation.layout.n_words, tuple(sorted(widths.items())))
+           relation.layout.n_words, tuple(sorted(widths.items())),
+           mesh, shard_axes)
     fn = _FN_CACHE.get(sig)
     if fn is None:
         if backend == "pallas":
@@ -409,11 +507,21 @@ def compile_program(relation: eng.PimRelation,
                                   interpret)
         else:
             fn = _build_jnp_fn(instrs, mask_outputs, analysis)
+        if mesh is not None:
+            fn = dist.shard_program_fn(
+                fn, mesh, shard_axes,
+                source_attrs=analysis.source_attrs,
+                mask_outputs=mask_outputs,
+                sum_dests=tuple(d for d, k in scalar_kinds.items()
+                                if k[0] == "sum"),
+                mm_items=tuple((d, k[1]) for d, k in scalar_kinds.items()
+                               if k[0] == "minmax"))
         fn = jax.jit(fn)
-        _FN_CACHE[sig] = fn
+        _FN_CACHE.put(sig, fn)
 
     return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
-                           backend, relation.layout.n_words, fn)
+                           backend, relation.layout.n_words, fn,
+                           mesh=mesh, shard_axes=shard_axes)
 
 
 def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult:

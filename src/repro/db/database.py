@@ -47,16 +47,29 @@ class QueryRun:
 
 
 class PimDatabase:
+    """``mesh``: a ``jax.sharding.Mesh`` — every PIM-resident relation is
+    sharded along the record/word axis over ``shard_axes`` (default: all
+    mesh axes) and the fused path runs SPMD via shard_map, one logical
+    dispatch per relation (see ``core.distributed``)."""
+
     def __init__(self, tables: Dict[str, Dict[str, np.ndarray]],
-                 backend: str = "jnp"):
+                 backend: str = "jnp", mesh=None, shard_axes=None):
         self.tables = tables
         self.backend = backend
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.core import distributed as dist
+            self.shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
+        else:
+            self.shard_axes = None
         self.relations: Dict[str, eng.PimRelation] = {}
         for name, cols in tables.items():
             if S.SCHEMA[name].in_pim:
                 enc = {a.name: a.encoding for a in S.SCHEMA[name].attrs}
-                self.relations[name] = eng.PimRelation.from_columns(
-                    name, cols, encodings=enc)
+                rel = eng.PimRelation.from_columns(name, cols, encodings=enc)
+                if mesh is not None:
+                    rel = rel.shard(mesh, self.shard_axes)
+                self.relations[name] = rel
 
     # -- PIM execution ------------------------------------------------------
     def _compile_relation(self, rel: eng.PimRelation, spec: Q.QuerySpec,
@@ -119,8 +132,11 @@ class PimDatabase:
         """Execute a query on the PIM copy.
 
         fused=True (default): one compiled dispatch per relation program —
-        the paper's single-pass/single-readout execution model.
-        fused=False: the eager instruction-at-a-time engine (oracle).
+        the paper's single-pass/single-readout execution model. With a
+        ``mesh`` the dispatch is the shard_map-wrapped SPMD executable
+        (still one logical dispatch; see ``core.distributed``).
+        fused=False: the eager instruction-at-a-time engine (oracle) —
+        also correct on sharded relations, via global ops.
         """
         t0 = time.perf_counter()
         rel_runs: Dict[str, RelationRun] = {}
@@ -132,7 +148,9 @@ class PimDatabase:
             if fused:
                 cp = prog.compile_program(rel, c.program,
                                           mask_outputs=(mask_reg,),
-                                          backend=self.backend)
+                                          backend=self.backend,
+                                          mesh=self.mesh,
+                                          shard_axes=self.shard_axes)
                 res = prog.run_program(cp, rel)
                 if group_regs:
                     aggs.update(self._finalize_aggs(

@@ -20,6 +20,15 @@ total.
 VMEM budget per grid step: (source rows + peak live planes) x BLOCK_W x 4 B
 — the worst evaluated program (TPC-H Q1: ~55 source + ~90 live derived
 planes) stays under 1.5 MiB at BLOCK_W = 2048.
+
+Distributed execution (``core.distributed.shard_program_fn``) wraps the
+whole program function — this kernel included — in ``shard_map``: the
+kernel then sees only its shard's word slice (``W / n_shards``, still a
+multiple of a power of two, so ``pick_block`` always finds a dividing
+block), emits per-shard popcount partials that are psum-combined in the
+surrounding SPMD program, and writes its shard of each output mask. The
+valid plane rides along as the last stacked row per shard, so padding
+words beyond ``n_records`` are masked off locally wherever they live.
 """
 from __future__ import annotations
 

@@ -1,0 +1,22 @@
+"""Shared helper: run a code snippet in a subprocess whose host is forced
+to expose multiple CPU devices, so the main pytest process keeps seeing
+exactly 1 device (sibling-import pattern, like ``_hypothesis_compat``)."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_forced_multidevice(code: str, devices: int = 8,
+                           timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout

@@ -169,6 +169,41 @@ def test_program_multi_tile_grid(backend):
     assert res.scalar(regs["mx"][1]) == int(cols["v"][sel].max())
 
 
+def test_fn_cache_lru_eviction(monkeypatch):
+    """The compiled-executable cache is a bounded LRU: filling it past
+    capacity evicts the least-recently-used executable (a long-lived
+    serving process must not leak compiled programs), and an evicted
+    signature recompiles correctly on next use."""
+    small = prog.LruFnCache(capacity=2)
+    monkeypatch.setattr(prog, "_FN_CACHE", small)
+    rng = np.random.default_rng(3)
+    cols = {"a": rng.integers(0, 1 << 8, 2000)}
+    rel = eng.PimRelation.from_columns("lru_t", cols)
+
+    def compile_for(imm):
+        c = Compiler(rel)
+        m = c.compile_filter(Cmp("lt", Col("a"), Lit(imm)),
+                             with_transform=False)
+        return prog.compile_program(rel, c.program, mask_outputs=(m,)), m
+
+    compile_for(10)
+    compile_for(20)
+    assert len(small) == 2 and small.evictions == 0
+    compile_for(30)                      # pushes imm=10 out
+    assert len(small) == 2 and small.evictions == 1
+    misses = small.misses
+    compile_for(30)                      # LRU hit: no rebuild
+    assert small.misses == misses and small.hits >= 1
+    cp1, m1 = compile_for(10)            # evicted sig: rebuilt, still exact
+    assert small.evictions >= 2
+    res = prog.run_program(cp1, rel)
+    np.testing.assert_array_equal(res.mask(m1), cols["a"] < 10)
+    small.set_capacity(1)                # shrinking evicts immediately
+    assert len(small) == 1
+    with pytest.raises(ValueError):
+        small.set_capacity(0)
+
+
 def test_program_api_minimal():
     """compile_program/run_program on a hand-built relation program."""
     rng = np.random.default_rng(0)
