@@ -4,22 +4,36 @@ Measures the jnp bulk-bitwise paths (what the Pallas kernels compute,
 executed via XLA on this host) against a numpy full-width column scan —
 the same records/second comparison the paper makes, realised on vector
 hardware. Also times the fused filter+aggregate path vs the paper-faithful
-two-phase (filter, then masked reduce) execution, quantifying the fusion
-win in bytes touched.
+two-phase (filter, then masked reduce) execution, the whole-program fused
+executor vs the eager engine (TPC-H Q6), and the grouped-aggregation
+executor on TPC-H Q1 (per-pass aggregate-plane reads: grouped popcounts
+vs one read per ReduceSum).
+
+Every row tracks its cold (first-call, XLA-compile-inclusive) latency
+separately from the warm steady state, so the compile-latency trend the
+ROADMAP worries about has a trajectory. ``python benchmarks/
+bench_kernels.py --json`` emits the machine-readable form the CI
+benchmark-regression gate (``check_regression.py``) consumes; without
+``--json`` it prints the human CSV that ``run.py`` aggregates.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitslice, engine
+from repro.core import bitslice
 from repro.kernels import ref
 
 N = 1 << 21      # 2M records
+DEFAULT_SF = 0.005
 
 
 def _setup():
@@ -47,10 +61,17 @@ def _time(fn, *args, reps=5):
     return cold, (time.perf_counter() - t0) / reps * 1e6
 
 
-def run_benches() -> List[Tuple[str, float, str]]:
+def _row(name: str, warm_us: float, cold_us=None, **meta) -> dict:
+    return {"name": name, "warm_us": float(warm_us),
+            "cold_us": None if cold_us is None else float(cold_us),
+            "meta": meta}
+
+
+def collect_benches(sf: float = DEFAULT_SF) -> List[dict]:
+    """All bench rows in rich (JSON-ready) form."""
     key, val, kp, vp, valid = _setup()
     lo, hi = 10_000, 45_000
-    rows = []
+    rows: List[dict] = []
 
     # bit-sliced range filter (jnp path of the Pallas kernel)
     range_jit = jax.jit(lambda p: ref.predicate_range(p, lo, hi))
@@ -60,9 +81,10 @@ def run_benches() -> List[Tuple[str, float, str]]:
     for _ in range(5):
         base = (key >= lo) & (key < hi)
     us_np = (time.perf_counter() - t0) / 5 * 1e6
-    rows.append(("kernel_range_filter_bitsliced", us_bit,
-                 f"records_per_us={N/us_bit:.0f};cold_us={cold_bit:.0f};"
-                 f"numpy_us={us_np:.0f};bytes_touched={16*N/8}"))
+    rows.append(_row("kernel_range_filter_bitsliced", us_bit, cold_bit,
+                     records_per_us=round(N / us_bit),
+                     numpy_us=round(us_np),
+                     bytes_touched=16 * N // 8))
 
     # fused filter+aggregate vs two-phase
     fused = jax.jit(lambda f, a, v: ref.filter_agg_popcounts(f, a, lo, hi, v))
@@ -79,22 +101,23 @@ def run_benches() -> List[Tuple[str, float, str]]:
     want = int(val[sel].sum())
     got_vec = np.asarray(fused(kp, vp, valid))
     got = sum(int(got_vec[b + 1]) << b for b in range(12))
-    rows.append(("kernel_fused_filter_agg", us_fused,
-                 f"two_phase_us={us_two:.0f};fusion_speedup={us_two/us_fused:.2f};"
-                 f"cold_us={cold_fused:.0f};exact={got == want}"))
+    rows.append(_row("kernel_fused_filter_agg", us_fused, cold_fused,
+                     two_phase_us=round(us_two),
+                     fusion_speedup=round(us_two / us_fused, 2),
+                     exact=got == want))
 
     # packed mask readout (column-transform analogue): bytes host must read
-    rows.append(("readout_reduction", 0.0,
-                 f"filter_bytes={N//8};fullwidth_bytes={N*2};ratio=16.0"))
+    rows.append(_row("readout_reduction", 0.0,
+                     filter_bytes=N // 8, fullwidth_bytes=N * 2, ratio=16.0))
 
-    rows.extend(bench_program_fusion())
+    rows.extend(bench_program_fusion(sf))
     return rows
 
 
-def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
-    """Whole-program fusion on TPC-H Q6: eager instruction-at-a-time engine
-    (one+ jax dispatch per instruction, ReduceSum round-trips to host) vs
-    the compiled program path (ONE dispatch per relation program)."""
+def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
+    """Whole-program fusion on TPC-H Q6 (eager instruction-at-a-time engine
+    vs ONE compiled dispatch) and grouped aggregation on TPC-H Q1 (6 group
+    masks popcounted per pass with one read of each aggregate plane)."""
     from repro.core import engine as eng_mod
     from repro.core import program as prog
     from repro.db import database, queries, tpch
@@ -125,20 +148,58 @@ def bench_program_fusion(sf: float = 0.01) -> List[Tuple[str, float, str]]:
     # fused path is exactly one compiled call per relation program.
     eager_disp = len(c.program)
     fused_disp = cp.n_dispatches
-    rows = [("q6_program_fused_vs_eager", us_fused,
-             f"eager_us={us_eager:.0f};speedup={us_eager / us_fused:.2f};"
-             f"cold_compile_us={cold_fused:.0f};"
-             f"eager_dispatches={eager_disp};fused_dispatches={fused_disp};"
-             f"dispatch_reduction={eager_disp / fused_disp:.0f}x;"
-             f"paper_cycles={cp.paper_cycles()};"
-             f"exact={int(eager_val) == fused_val};"
-             f"peak_live_planes={cp.peak_live_planes};"
-             f"total_reg_planes={cp.total_reg_planes}")]
+    rows = [_row("q6_program_fused_vs_eager", us_fused, cold_fused,
+                 eager_us=round(us_eager),
+                 speedup=round(us_eager / us_fused, 2),
+                 eager_dispatches=eager_disp,
+                 fused_dispatches=fused_disp,
+                 dispatch_reduction=round(eager_disp / fused_disp),
+                 paper_cycles=cp.paper_cycles(),
+                 exact=int(eager_val) == fused_val,
+                 peak_live_planes=cp.peak_live_planes,
+                 total_reg_planes=cp.total_reg_planes)]
+    rows.extend(bench_q1_grouped(db))
     rows.extend(bench_distributed_program(db, spec))
     return rows
 
 
-def bench_distributed_program(db, spec) -> List[Tuple[str, float, str]]:
+def bench_q1_grouped(db) -> List[dict]:
+    """One-pass grouped aggregation on TPC-H Q1: all 6 group masks ride a
+    single grouped-popcount job per aggregate plane stack, so each pass
+    reads every aggregate plane ONCE (the kernel's plane-read counter)
+    instead of once per group's ReduceSum — and MIN/MAX (when present)
+    narrows inside the same pass."""
+    from repro.core import program as prog
+    from repro.db import queries
+
+    spec = queries.get_query("Q1")
+    rel = db.relations["lineitem"]
+    c, mask_reg, group_regs = db._compile_relation(
+        rel, spec, spec.filters["lineitem"])
+    cp = prog.compile_program(rel, c.program, mask_outputs=(mask_reg,))
+
+    def q1_once():
+        r = prog.run_program(cp, rel)
+        return r.scalar(group_regs[0][1]["sum_qty"][1])
+
+    cold, warm = _time(q1_once, reps=3)
+    fused = db.run_pim(spec, fused=True)        # cached executable: warm
+    base = db.run_baseline(spec)
+    n_reduce_instrs = sum(1 for i in c.program
+                          if i.kind in ("ReduceSum", "ReduceMinMax"))
+    return [_row("q1_grouped", warm, cold,
+                 groups=len(spec.groups or ()),
+                 reduce_instrs=n_reduce_instrs,
+                 reduce_jobs=cp.n_reduce_jobs,
+                 plane_reads_grouped=cp.agg_plane_reads,
+                 plane_reads_ungrouped=cp.agg_plane_reads_ungrouped,
+                 plane_read_reduction=round(
+                     cp.agg_plane_reads_ungrouped / cp.agg_plane_reads, 2),
+                 dispatches=cp.n_dispatches,
+                 exact=fused.aggregates == base.aggregates)]
+
+
+def bench_distributed_program(db, spec) -> List[dict]:
     """Sharded fused execution over all local devices (paper §4 scale-out:
     one request broadcast to every module, psum host-combine). Skipped —
     with a note row — on single-device hosts and on device counts that do
@@ -148,10 +209,11 @@ def bench_distributed_program(db, spec) -> List[Tuple[str, float, str]]:
     n_dev = len(jax.devices())
     rel = db.relations["lineitem"]
     if n_dev < 2 or rel.layout.n_words % n_dev:
-        return [("q6_program_distributed", 0.0,
-                 f"skipped=need_dividing_multi_device;devices={n_dev};"
-                 f"n_words={rel.layout.n_words};hint=set XLA_FLAGS="
-                 "--xla_force_host_platform_device_count=8")]
+        return [_row("q6_program_distributed", 0.0,
+                     skipped="need_dividing_multi_device", devices=n_dev,
+                     n_words=rel.layout.n_words,
+                     hint="set XLA_FLAGS="
+                          "--xla_force_host_platform_device_count=8")]
     mesh = jax.make_mesh((1, n_dev), ("pod", "data"))
     rel = rel.shard(mesh)                    # reuse the already-built planes
     c, mask_reg, group_regs = db._compile_relation(
@@ -164,6 +226,69 @@ def bench_distributed_program(db, spec) -> List[Tuple[str, float, str]]:
         return r.scalar(group_regs[0][1]["revenue"][1])
 
     cold, warm = _time(dist_once)
-    return [("q6_program_distributed", warm,
-             f"cold_compile_us={cold:.0f};devices={n_dev};"
-             f"shards={cp.n_shards};dispatches={cp.n_dispatches}")]
+    return [_row("q6_program_distributed", warm, cold, devices=n_dev,
+                 shards=cp.n_shards, dispatches=cp.n_dispatches)]
+
+
+# --------------------------------------------------------------------------
+# Output plumbing
+# --------------------------------------------------------------------------
+def _derived_str(row: dict) -> str:
+    parts = []
+    if row.get("cold_us") is not None:
+        parts.append(f"cold_us={row['cold_us']:.0f}")
+    parts.extend(f"{k}={v}" for k, v in row["meta"].items())
+    return ";".join(parts)
+
+
+def run_benches(sf: float = DEFAULT_SF) -> List[Tuple[str, float, str]]:
+    """Legacy CSV-row interface consumed by ``benchmarks/run.py``."""
+    return [(r["name"], r["warm_us"], _derived_str(r))
+            for r in collect_benches(sf)]
+
+
+def to_json(rows: List[dict], sf: float) -> Dict[str, object]:
+    return {
+        "schema": 1,
+        "sf": sf,
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_count": len(jax.devices()),
+        # Wall-time gates only bind against a baseline measured on the
+        # same class of machine; check_regression.py downgrades them to
+        # warnings when the baseline was not produced in CI.
+        "ci": bool(os.environ.get("GITHUB_ACTIONS")),
+        "rows": {r["name"]: {"warm_us": r["warm_us"],
+                             "cold_us": r["cold_us"],
+                             "meta": r["meta"]} for r in rows},
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable bench JSON")
+    ap.add_argument("--sf", type=float, default=DEFAULT_SF,
+                    help="TPC-H scale factor for the program benches")
+    ap.add_argument("--out", default=None,
+                    help="write output to this path instead of stdout")
+    args = ap.parse_args(argv)
+
+    rows = collect_benches(sf=args.sf)
+    if args.json:
+        text = json.dumps(to_json(rows, args.sf), indent=2, sort_keys=True)
+    else:
+        text = "\n".join(f"{name},{us:.1f},{derived}"
+                         for name, us, derived in
+                         ((r["name"], r["warm_us"], _derived_str(r))
+                          for r in rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Benchmark-regression gate for CI.
+
+Compares a fresh ``bench_kernels.py --json`` run against the checked-in
+``benchmarks/baseline.json`` and fails (exit 1) when a gated metric
+regresses by more than ``--max-ratio`` (default 1.5x): warm Q1/Q6 fused
+wall time, dispatch counts, and the grouped executor's per-pass
+aggregate-plane-read counter. It also prints the cold (XLA compile)
+latency of every row next to its baseline, so the compile-time trend the
+ROADMAP tracks has a visible trajectory in every CI log.
+
+Refreshing the baseline: run ``python benchmarks/bench_kernels.py --json
+--sf 0.005 --out benchmarks/baseline.json`` on the reference machine (CI
+uploads each run's JSON as the ``BENCH_<sha>.json`` artifact, which can
+be committed directly) — see benchmarks/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (row name, field path, kind). "time" fields are wall-clock (noisy, gated
+# at max-ratio); "count" fields are deterministic model counters (gated at
+# the same ratio per the gate spec, but any growth is suspicious).
+GATES = [
+    ("q6_program_fused_vs_eager", "warm_us", "time"),
+    ("q1_grouped", "warm_us", "time"),
+    ("q6_program_fused_vs_eager", "meta.fused_dispatches", "count"),
+    ("q1_grouped", "meta.dispatches", "count"),
+    ("q1_grouped", "meta.plane_reads_grouped", "count"),
+    ("q1_grouped", "meta.reduce_jobs", "count"),
+]
+
+
+def _get(rows: dict, name: str, path: str):
+    node = rows.get(name)
+    if node is None:
+        return None
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _fmt_us(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v / 1000:.1f}ms" if v >= 1000 else f"{v:.0f}us"
+
+
+def compare(baseline: dict, current: dict, max_ratio: float) -> int:
+    base_rows, cur_rows = baseline["rows"], current["rows"]
+
+    print("== XLA compile (cold) latency per bench row ==")
+    print(f"{'row':40s} {'baseline':>10s} {'current':>10s} {'ratio':>7s}")
+    for name in sorted(set(base_rows) | set(cur_rows)):
+        b = _get(base_rows, name, "cold_us")
+        c = _get(cur_rows, name, "cold_us")
+        ratio = f"{c / b:.2f}x" if b and c else "-"
+        print(f"{name:40s} {_fmt_us(b):>10s} {_fmt_us(c):>10s} {ratio:>7s}")
+
+    # Deterministic counters gate against any baseline; wall-time gates
+    # only bind when the baseline itself was measured in CI (same runner
+    # class) — a dev-machine baseline would fail every run on timing
+    # alone. Commit a green run's BENCH_<sha>.json artifact to arm them.
+    ci_baseline = bool(baseline.get("ci"))
+    print(f"\n== Gated metrics (fail above {max_ratio:.2f}x of baseline) ==")
+    if not ci_baseline:
+        print("  (baseline not CI-sourced: time gates report-only,"
+              " counts still gate)")
+    failures = []
+    for name, path, kind in GATES:
+        b = _get(base_rows, name, path)
+        c = _get(cur_rows, name, path)
+        if c is None:
+            failures.append(f"{name}.{path}: missing from current run")
+            continue
+        if b is None:
+            print(f"  {name}.{path}: no baseline (={c}), skipping")
+            continue
+        ok = (not c) if not b else c <= b * max_ratio
+        enforced = kind != "time" or ci_baseline
+        verdict = "OK" if ok else ("FAIL" if enforced else "WARN")
+        print(f"  [{verdict}] {name}.{path} ({kind}): baseline={b} current={c}")
+        if not ok and enforced:
+            failures.append(f"{name}.{path}: {c} vs baseline {b} (> {max_ratio}x)")
+
+    for name in cur_rows:
+        if _get(cur_rows, name, "meta.exact") is False:
+            failures.append(f"{name}: exactness check failed (meta.exact)")
+
+    if failures:
+        print("\nBENCH GATE: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nBENCH GATE: OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-ratio", type=float, default=1.5)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    return compare(baseline, current, args.max_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,16 +25,19 @@ so it is lowered once and wrapped with ``shard_map``
 * **filters** — each shard computes its packed result mask locally; the
   output mask stays sharded ``P(shard_axes)``. A pure filter needs NO
   collective at all ("each module computes its pages independently").
-* **SUM/COUNT** — each shard emits masked per-bit popcount partials;
-  one ``psum`` over the shard axes yields exact int32 per-bit totals,
+* **SUM/COUNT** — each shard emits the per-(group, bit) masked popcount
+  partials of its *grouped* reduce jobs (every ReduceSum sharing a
+  source plane stack rides one job — see ``core.program.plan_reduces``);
+  one ``psum`` per job over the shard axes yields exact int32 totals,
   and the exact 2^b weighting still happens in host Python ints. This
   is the paper's "host combines per-crossbar reduce outputs", fused
   into the same single dispatch.
 * **MIN/MAX** — each shard narrows its own candidates to a per-shard
-  extremum (bit vector + found flag); an ``all_gather`` over the shard
-  axes followed by an MSB-first bitwise combine
-  (:func:`combine_minmax_shards`) selects the global extremum, still
-  inside the one dispatch and exact at any bit width.
+  extremum (bit vector + found flag; inside the Pallas kernel this is
+  itself a per-tile narrowing + cross-tile combine); an ``all_gather``
+  over the shard axes followed by the same MSB-first bitwise combine
+  (:func:`combine_minmax_candidates`) selects the global extremum,
+  still inside the one dispatch and exact at any bit width.
 
 Everything above is ONE logical dispatch per relation program: the
 ``jax.jit(shard_map(...))``-compiled executable.
@@ -147,15 +150,19 @@ def make_sum_where_program(imm_lo: int, imm_hi: int):
 # --------------------------------------------------------------------------
 # Compiled-program sharding (the fused executor's distributed path)
 # --------------------------------------------------------------------------
-def combine_minmax_shards(bits: jnp.ndarray, found: jnp.ndarray,
-                          is_max: bool):
-    """Cross-shard MIN/MAX combine, exact at any bit width.
+def combine_minmax_candidates(bits: jnp.ndarray, found: jnp.ndarray,
+                              is_max: bool):
+    """MIN/MAX candidate combine, exact at any bit width.
 
-    ``bits`` is ``(n_shards, n_bits)`` int32 per-shard extremum bits
-    (LSB-first), ``found`` is ``(n_shards,)`` bool. MSB-first narrowing
-    over the shard axis — the same candidate-elimination the paper runs
-    over crossbar rows, re-run over per-module partials. Returns
-    ``((n_bits,) int32 global extremum bits, () bool any-found)``.
+    ``bits`` is ``(n_candidates, n_bits)`` int32 per-candidate extremum
+    bits (LSB-first), ``found`` is ``(n_candidates,)`` bool. MSB-first
+    narrowing over the candidate axis — the same candidate-elimination
+    the paper runs over crossbar rows, re-run over partial extrema. The
+    candidate axis is *tiles* when the program kernel's per-tile MIN/MAX
+    outputs are reduced (``core.program``), and *shards* when the
+    per-shard extrema of the SPMD path are reduced below — one mechanism,
+    both levels of the hierarchy. Returns ``((n_bits,) int32 global
+    extremum bits, () bool any-found)``.
     """
     n_bits = bits.shape[1]
     cand = found
@@ -175,6 +182,10 @@ def combine_minmax_shards(bits: jnp.ndarray, found: jnp.ndarray,
     return jnp.stack(out), jnp.any(found)
 
 
+# Backwards-compatible name for the cross-shard call sites.
+combine_minmax_shards = combine_minmax_candidates
+
+
 def _gather_shards(x: jnp.ndarray, ax: Tuple[str, ...]) -> jnp.ndarray:
     """all_gather over the shard axes -> leading (n_shards,) axis."""
     return jax.lax.all_gather(x, ax)
@@ -184,23 +195,27 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
                      shard_axes: Sequence[str], *,
                      source_attrs: Sequence[str],
                      mask_outputs: Sequence[str],
-                     sum_dests: Sequence[str],
+                     pc_job_keys: Sequence[str],
                      mm_items: Sequence[Tuple[str, bool]]) -> Callable:
     """Lift a compiled per-relation program function to SPMD on ``mesh``.
 
-    ``local_fn(planes dict, valid) -> {"masks", "sums", "mm_bits",
+    ``local_fn(planes dict, valid) -> {"masks", "job_pc", "mm_bits",
     "mm_found"}`` is the pure single-device executable from
     ``core.program``; the returned function has the same signature and
     output structure but runs one shard per device: masks stay sharded,
-    per-bit popcount partials are psum-combined, per-shard MIN/MAX
-    candidate bits are gathered and combined. Exactly ONE logical
+    the per-(group, bit) popcount partials of each *grouped* reduce job
+    are psum-combined as one ``(n_groups, n_bits)`` matrix — a single
+    collective per source plane stack, however many group masks share it
+    — and per-shard MIN/MAX candidate bits are gathered and reduced by
+    :func:`combine_minmax_candidates`, the same combine the kernel's
+    cross-tile reduction uses one level down. Exactly ONE logical
     dispatch per relation program once jitted.
     """
     ax = mesh_shard_axes(mesh, shard_axes)
     in_specs = ({a: P(None, ax) for a in source_attrs}, P(ax))
     out_specs = {
         "masks": {m: P(ax) for m in mask_outputs},
-        "sums": {d: P() for d in sum_dests},
+        "job_pc": {k: P() for k in pc_job_keys},
         "mm_bits": {d: P() for d, _ in mm_items},
         "mm_found": {d: P() for d, _ in mm_items},
     }
@@ -209,14 +224,15 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
              check_rep=False)
     def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
         raw = local_fn(planes, valid)
-        sums = {d: jax.lax.psum(raw["sums"][d], ax) for d in sum_dests}
+        job_pc = {k: jax.lax.psum(raw["job_pc"][k], ax) for k in pc_job_keys}
         mm_bits: Dict[str, jnp.ndarray] = {}
         mm_found: Dict[str, jnp.ndarray] = {}
         for d, is_max in mm_items:
             gb = _gather_shards(raw["mm_bits"][d], ax)
             gf = _gather_shards(raw["mm_found"][d], ax)
-            mm_bits[d], mm_found[d] = combine_minmax_shards(gb, gf, is_max)
+            mm_bits[d], mm_found[d] = combine_minmax_candidates(gb, gf,
+                                                                is_max)
         return {"masks": {m: raw["masks"][m] for m in mask_outputs},
-                "sums": sums, "mm_bits": mm_bits, "mm_found": mm_found}
+                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found}
 
     return _run

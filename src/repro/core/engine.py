@@ -182,6 +182,22 @@ def reduce_sum_bits(planes: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
                       for b in range(planes.shape[0])])
 
 
+def reduce_sum_bits_grouped(planes: jnp.ndarray,
+                            masks: jnp.ndarray) -> jnp.ndarray:
+    """Per-(group, bit) masked popcounts for a *stack* of group masks:
+    out[g, b] = popcount(plane_b & mask_g). One read of each aggregate
+    plane serves every group (the paper's grouped aggregation inside the
+    array; arXiv:2307.00658 §4), where per-group ``reduce_sum_bits`` calls
+    would re-read the plane stack once per group.
+
+    planes: (n_bits, W) uint32; masks: (n_groups, W) uint32 ->
+    (n_groups, n_bits) int32. Weighting by 2^b stays with the caller.
+    """
+    return jnp.sum(
+        popcount_u32(masks[:, None, :] & planes[None, :, :]).astype(jnp.int32),
+        axis=-1)
+
+
 def reduce_sum(planes: jnp.ndarray, mask: jnp.ndarray) -> int:
     """SUM = sum_b 2^b * popcount(plane_b & mask) — bit-serial reduce.
 

@@ -18,10 +18,19 @@ come back from the same dispatch, and only the final exact 2^b weighting
 Backends:
 
 * ``backend="jnp"``    — the whole program traced as one jnp graph.
-* ``backend="pallas"`` — the predicate DAG + popcount reduces run inside
-  one Pallas kernel (``repro.kernels.program``) streaming
-  ``(n_bits, BLOCK_W)`` tiles; MIN/MAX narrowing (inherently a multi-pass
-  global reduction) stays in the surrounding jit.
+* ``backend="pallas"`` — the predicate DAG + every reduce run inside one
+  Pallas kernel (``repro.kernels.program``) streaming
+  ``(n_bits, BLOCK_W)`` tiles: grouped popcounts accumulate into
+  per-(group, bit) int32 VMEM accumulators across the grid, and MIN/MAX
+  narrows per tile, emitting candidate bits a cross-tile combine reduces.
+
+Both backends share one :func:`plan_reduces` step: every ``ReduceSum``
+over the same source plane stack is coalesced into a single *grouped*
+popcount job — one read of the aggregate planes serves all of a query's
+group masks (TPC-H Q1's 6 groups drop from 6 plane-stack reads per pass
+to 1; the plan records both counts for the bench trajectory). Grouped
+jobs execute at the program position of their last member, so the plan
+also extends register liveness across the deferral.
 
 The eager engine is unchanged and remains the oracle for tests.
 """
@@ -31,7 +40,8 @@ import collections
 import dataclasses
 import os
 import threading
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, FrozenSet, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -263,15 +273,6 @@ class BitwiseEvaluator:
                              "must be handled by the caller")
 
 
-def _reduce_sum_bits_vec(planes: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    """Masked per-bit popcounts, vectorised over the bit axis: one fused
-    (n_bits, W) op instead of n_bits separate chains. Same int32 result as
-    ``engine.reduce_sum_bits`` but keeps the traced graph O(1) per reduce —
-    the eager oracle keeps the per-bit form."""
-    return jnp.sum(eng.popcount_u32(planes & mask[None]).astype(jnp.int32),
-                   axis=tuple(range(1, planes.ndim)))
-
-
 def _reduce_minmax_bits(planes: jnp.ndarray, mask: jnp.ndarray,
                         is_max: bool):
     """Traceable MSB-first narrowing. Returns ((n_bits,) int32 result bits
@@ -294,22 +295,144 @@ def _reduce_minmax_bits(planes: jnp.ndarray, mask: jnp.ndarray,
     return jnp.stack(bits), jnp.any(mask != 0)
 
 
-def _dependency_slice(instrs: Sequence[isa.PimInstruction],
-                      upto: int, targets: Sequence[str]) -> List[int]:
-    """Indices of the non-reduce instructions (before ``upto``) needed to
-    materialise ``targets`` — the recompute set for MIN/MAX operands the
-    Pallas kernel doesn't export."""
-    needed = set(targets)
-    picked: List[int] = []
-    for i in range(upto - 1, -1, -1):
-        ins = instrs[i]
-        if ins.kind in _REDUCE_KINDS:
-            continue
-        if ins.dest in needed:
-            picked.append(i)
-            needed.discard(ins.dest)
-            needed.update(instruction_reads(ins))
-    return picked[::-1]
+# --------------------------------------------------------------------------
+# Reduce planning: grouped popcounts + in-kernel MIN/MAX jobs
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SumJob:
+    """All ReduceSums over one source plane stack, coalesced.
+
+    The popcount executes once, at instruction index ``exec_at`` (the last
+    member's position), against the whole stack of ``masks`` — one read of
+    the ``width`` aggregate planes per pass instead of one per member.
+    Columns ``[col_start, col_start + width * len(masks))`` of the
+    popcount accumulator hold the per-(bit, group) partials, bit-major:
+    column ``col_start + b * len(masks) + g`` is (bit b, mask g).
+    """
+    attr: str
+    masks: Tuple[str, ...]           # unique mask registers, stack order
+    width: int                       # planes of the shared operand
+    exec_at: int                     # instruction index the job runs at
+    col_start: int
+
+    @property
+    def n_cols(self) -> int:
+        return self.width * len(self.masks)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinMaxJob:
+    """One ReduceMinMax, lowered into the kernel at its own position.
+
+    Per tile the kernel narrows MSB-first and emits ``width`` candidate
+    bits plus a found flag at columns ``[col_start, col_start + width]``
+    of the per-tile MIN/MAX output; a cross-tile combine (the shape of
+    ``core.distributed.combine_minmax_candidates``) reduces them.
+    """
+    dest: str
+    attr: str
+    mask: str
+    width: int
+    is_max: bool
+    exec_at: int
+    col_start: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """Grouped reduce jobs + liveness extended across job deferral."""
+    sum_jobs: Tuple[SumJob, ...]
+    mm_jobs: Tuple[MinMaxJob, ...]
+    dest_slot: Mapping[str, Tuple[int, int]]  # sum dest -> (job, mask idx)
+    last_use: Mapping[str, int]               # analysis.last_use, extended
+    n_pc_cols: int                            # popcount accumulator columns
+    n_mm_cols: int                            # per-tile MIN/MAX columns
+    plane_reads: int                          # agg plane reads/pass, grouped
+    plane_reads_ungrouped: int                # one read per ReduceSum/MinMax
+
+    def job_keys(self) -> Tuple[str, ...]:
+        return tuple(f"j{j}" for j in range(len(self.sum_jobs)))
+
+
+def plan_reduces(instrs: Sequence[isa.PimInstruction],
+                 analysis: ProgramAnalysis,
+                 widths: Mapping[str, int]) -> ReducePlan:
+    """Coalesce ReduceSums sharing a source plane stack into grouped jobs.
+
+    Grouping defers a member's popcount to the last member's position,
+    which is only sound while registers are single-assignment (the
+    Compiler always emits fresh destinations). If a destination name is
+    ever reassigned, coalescing is disabled and every reduce becomes a
+    singleton job at its own position. Identical (attr, mask) pairs (Q1's
+    ``avg`` re-reducing the ``sum`` operand, per-group counts) share one
+    accumulator column instead of recounting.
+    """
+    seen_dests: set = set()
+    ssa = True
+    for ins in instrs:
+        if ins.dest in seen_dests:
+            ssa = False
+        seen_dests.add(ins.dest)
+
+    def op_width(ins) -> int:
+        if analysis.reg_kind.get(ins.attr) == "mask":
+            return 1
+        return analysis.widths.get(ins.attr, widths.get(ins.attr, ins.n_bits))
+
+    members: Dict[str, List[Tuple[int, str, str]]] = {}
+    order: List[str] = []
+    job_width: Dict[str, int] = {}
+    mm_jobs: List[MinMaxJob] = []
+    ungrouped = 0
+    mm_col = 0
+    for i, ins in enumerate(instrs):
+        if ins.kind == "ReduceSum":
+            w = op_width(ins)
+            ungrouped += w
+            key = ins.attr if ssa else f"{ins.attr}@{i}"
+            if key not in members:
+                members[key] = []
+                order.append(key)
+                job_width[key] = w
+            members[key].append((i, ins.dest, ins.mask))
+        elif ins.kind == "ReduceMinMax":
+            w = op_width(ins)
+            ungrouped += w
+            mm_jobs.append(MinMaxJob(ins.dest, ins.attr, ins.mask, w,
+                                     ins.is_max, i, mm_col))
+            mm_col += w + 1                   # bits + found flag
+    sum_jobs: List[SumJob] = []
+    dest_slot: Dict[str, Tuple[int, int]] = {}
+    last_use: Dict[str, int] = dict(analysis.last_use)
+    col = 0
+    for j, key in enumerate(order):
+        masks: List[str] = []
+        for i, dest, mask in members[key]:
+            if mask not in masks:
+                masks.append(mask)
+            dest_slot[dest] = (j, masks.index(mask))
+        exec_at = max(i for i, _, _ in members[key])
+        attr = instrs[members[key][0][0]].attr
+        job = SumJob(attr, tuple(masks), job_width[key], exec_at, col)
+        sum_jobs.append(job)
+        col += job.n_cols
+        for r in (attr, *masks):             # operands live until the job
+            last_use[r] = max(last_use.get(r, -1), exec_at)
+    plane_reads = sum(s.width for s in sum_jobs) + sum(m.width
+                                                       for m in mm_jobs)
+    return ReducePlan(tuple(sum_jobs), tuple(mm_jobs), dest_slot, last_use,
+                      col, mm_col, plane_reads, ungrouped)
+
+
+def frees_by_instr(n_instrs: int, last_use: Mapping[str, int],
+                   keep: FrozenSet[str]) -> Tuple[Tuple[str, ...], ...]:
+    """frees[i] = registers whose (plan-extended) last use is instruction
+    ``i`` — dropped right after it executes, inside the kernel too."""
+    frees: List[List[str]] = [[] for _ in range(n_instrs)]
+    for r, i in last_use.items():
+        if 0 <= i < n_instrs and r not in keep and r != "__valid__":
+            frees[i].append(r)
+    return tuple(tuple(sorted(f)) for f in frees)
 
 
 # --------------------------------------------------------------------------
@@ -395,6 +518,7 @@ class CompiledProgram:
     mask_outputs: Tuple[str, ...]
     scalar_kinds: Dict[str, tuple]         # dest -> ("sum",)|("minmax",)
     analysis: ProgramAnalysis
+    plan: ReducePlan
     backend: str
     n_words: int
     _fn: Callable                          # (planes dict, valid) -> raw out
@@ -405,6 +529,21 @@ class CompiledProgram:
     def n_dispatches(self) -> int:
         """Device dispatches per execution — the fusion headline."""
         return 1
+
+    @property
+    def agg_plane_reads(self) -> int:
+        """Aggregate-plane tile reads per pass under the grouped plan."""
+        return self.plan.plane_reads
+
+    @property
+    def agg_plane_reads_ungrouped(self) -> int:
+        """Same count with one read per ReduceSum/MinMax (the pre-grouping
+        execution) — the grouped-aggregation headline is the ratio."""
+        return self.plan.plane_reads_ungrouped
+
+    @property
+    def n_reduce_jobs(self) -> int:
+        return len(self.plan.sum_jobs) + len(self.plan.mm_jobs)
 
     @property
     def n_shards(self) -> int:
@@ -447,7 +586,8 @@ class ProgramResult:
     def scalar(self, name: str) -> Optional[int]:
         kind = self._cp.scalar_kinds[name][0]
         if kind == "sum":
-            pcs = np.asarray(self._raw["sums"][name])
+            j, k = self._cp.plan.dest_slot[name]
+            pcs = np.asarray(self._raw["job_pc"][f"j{j}"])[k]
             return sum(int(pcs[b]) << b for b in range(pcs.shape[0]))
         if kind == "minmax":
             if not bool(np.asarray(self._raw["mm_found"][name])):
@@ -492,6 +632,7 @@ def compile_program(relation: eng.PimRelation,
             scalar_kinds[ins.dest] = ("minmax", ins.is_max)
     analysis = analyze_program(instrs, relation, keep=mask_outputs)
     widths = {a: relation.width_of(a) for a in analysis.source_attrs}
+    plan = plan_reduces(instrs, analysis, widths)
 
     if mesh is not None:
         from . import distributed as dist  # lazy: avoids import cycle
@@ -504,23 +645,22 @@ def compile_program(relation: eng.PimRelation,
     if fn is None:
         if backend == "pallas":
             fn = _build_pallas_fn(instrs, mask_outputs, analysis, widths,
-                                  interpret)
+                                  interpret, plan)
         else:
-            fn = _build_jnp_fn(instrs, mask_outputs, analysis)
+            fn = _build_jnp_fn(instrs, mask_outputs, analysis, plan)
         if mesh is not None:
             fn = dist.shard_program_fn(
                 fn, mesh, shard_axes,
                 source_attrs=analysis.source_attrs,
                 mask_outputs=mask_outputs,
-                sum_dests=tuple(d for d, k in scalar_kinds.items()
-                                if k[0] == "sum"),
+                pc_job_keys=plan.job_keys(),
                 mm_items=tuple((d, k[1]) for d, k in scalar_kinds.items()
                                if k[0] == "minmax"))
         fn = jax.jit(fn)
         _FN_CACHE.put(sig, fn)
 
     return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
-                           backend, relation.layout.n_words, fn,
+                           plan, backend, relation.layout.n_words, fn,
                            mesh=mesh, shard_axes=shard_axes)
 
 
@@ -535,18 +675,22 @@ def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult
 # --------------------------------------------------------------------------
 # Backend lowerings
 # --------------------------------------------------------------------------
-def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis):
-    keep = set(mask_outputs)
+def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
+                  plan: ReducePlan):
+    keep = frozenset(mask_outputs)
+    frees = frees_by_instr(len(instrs), plan.last_use, keep)
+    jobs_at: Dict[int, List[Tuple[int, SumJob]]] = {}
+    for j, job in enumerate(plan.sum_jobs):
+        jobs_at.setdefault(job.exec_at, []).append((j, job))
 
     def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
         ev = BitwiseEvaluator(lambda a: planes[a], valid)
-        sums: Dict[str, jnp.ndarray] = {}
+        job_pc: Dict[str, jnp.ndarray] = {}
         mm_bits: Dict[str, jnp.ndarray] = {}
         mm_found: Dict[str, jnp.ndarray] = {}
         for i, ins in enumerate(instrs):
             if ins.kind == "ReduceSum":
-                sums[ins.dest] = _reduce_sum_bits_vec(
-                    ev.planes(ins.attr), ev.masks[ins.mask])
+                pass                   # runs at its grouped job's exec_at
             elif ins.kind == "ReduceMinMax":
                 bits, found = _reduce_minmax_bits(
                     ev.planes(ins.attr), ev.masks[ins.mask], ins.is_max)
@@ -554,48 +698,27 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis):
                 mm_found[ins.dest] = found
             else:
                 ev.execute(ins)
-            for r in instruction_reads(ins):
-                if analysis.last_use.get(r) == i and r not in keep:
-                    ev.free(r)
+            for j, job in jobs_at.get(i, ()):
+                p = ev.planes(job.attr)[:job.width]
+                mstack = jnp.stack([ev.masks[m] for m in job.masks])
+                job_pc[f"j{j}"] = eng.reduce_sum_bits_grouped(p, mstack)
+            for r in frees[i]:
+                ev.free(r)
         return {"masks": {m: ev.masks[m] for m in mask_outputs},
-                "sums": sums, "mm_bits": mm_bits, "mm_found": mm_found}
+                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found}
 
     return _run
 
 
 def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
-                     widths: Dict[str, int], interpret: bool):
+                     widths: Dict[str, int], interpret: bool,
+                     plan: ReducePlan):
     from repro.kernels import program as kprog  # lazy: optional path
+    from .distributed import combine_minmax_candidates
 
-    # Popcount jobs, in program order: one (mask, attr, bit) per output
-    # column of the kernel's partial-sum matrix.
-    pc_jobs: List[Tuple[str, str, int]] = []
-    pc_slices: Dict[str, Tuple[int, int]] = {}
-    sum_slices: List[Tuple[int, int]] = []
-    mm_list: List[isa.PimInstruction] = []
-    for ins in instrs:
-        if ins.kind == "ReduceSum":
-            w = analysis.widths.get(ins.attr, widths.get(ins.attr, ins.n_bits))
-            if analysis.reg_kind.get(ins.attr) == "mask":
-                w = 1
-            start = len(pc_jobs)
-            pc_jobs.extend((ins.mask, ins.attr, b) for b in range(w))
-            pc_slices[ins.dest] = (start, len(pc_jobs))
-            sum_slices.append((start, len(pc_jobs)))
-        elif ins.kind == "ReduceMinMax":
-            mm_list.append(ins)
-
-    # The kernel must export every mask MIN/MAX narrows with, and the host
-    # recomputes (full-width, inside the same jit) any derived operand.
-    kernel_masks = list(mask_outputs)
-    for ins in mm_list:
-        if ins.mask not in kernel_masks:
-            kernel_masks.append(ins.mask)
-    kernel_masks_t = tuple(kernel_masks)
-
-    # Sum operands stay live until their ReduceSum executes *in-kernel* at
-    # its original program position, so plain last_use liveness holds.
-    keep = set(kernel_masks_t)
+    mask_outputs_t = tuple(mask_outputs)
+    frees = frees_by_instr(len(instrs), plan.last_use,
+                           frozenset(mask_outputs_t))
 
     def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
         attr_rows: Dict[str, Tuple[int, int]] = {}
@@ -608,35 +731,33 @@ def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
             r0 += p.shape[0]
         rows.append(valid[None])
         stacked = jnp.concatenate(rows, axis=0)
-        masks_arr, partials = kprog.fused_program(
+        masks_arr, pc_tot, mm_tiles = kprog.fused_program(
             stacked, instrs=instrs, attr_rows=attr_rows, valid_row=r0,
-            mask_outputs=kernel_masks_t, pc_jobs=tuple(pc_jobs),
-            sum_slices=tuple(sum_slices),
-            last_use=dict(analysis.last_use), keep=frozenset(keep),
+            mask_outputs=mask_outputs_t, sum_jobs=plan.sum_jobs,
+            mm_jobs=plan.mm_jobs, frees=frees,
+            n_pc_cols=plan.n_pc_cols, n_mm_cols=plan.n_mm_cols,
             interpret=interpret)
-        totals = jnp.sum(partials, axis=0, dtype=jnp.int32)
-        sums = {dest: totals[s:e] for dest, (s, e) in pc_slices.items()}
 
+        # Per-(bit, group) accumulator columns -> (n_groups, width) per job.
+        job_pc = {f"j{j}": pc_tot[0, job.col_start:job.col_start + job.n_cols]
+                  .reshape(job.width, len(job.masks)).T
+                  for j, job in enumerate(plan.sum_jobs)}
+
+        # Cross-tile MIN/MAX combine of the kernel's per-tile candidates —
+        # the same MSB-first narrowing the distributed path runs per shard.
         mm_bits: Dict[str, jnp.ndarray] = {}
         mm_found: Dict[str, jnp.ndarray] = {}
-        for ins in mm_list:
-            mask = masks_arr[kernel_masks_t.index(ins.mask)]
-            if ins.attr in analysis.source_attrs:
-                p = planes[ins.attr]
-            else:
-                # Recompute the derived operand full-width (rare: MIN/MAX
-                # over an arithmetic expression).
-                ev = BitwiseEvaluator(lambda a: planes[a], valid)
-                for k in _dependency_slice(instrs, len(instrs), [ins.attr]):
-                    ev.execute(instrs[k])
-                p = ev.planes(ins.attr)
-            bits, found = _reduce_minmax_bits(p, mask, ins.is_max)
-            mm_bits[ins.dest] = bits
-            mm_found[ins.dest] = found
+        for mj in plan.mm_jobs:
+            bits_t = mm_tiles[:, mj.col_start:mj.col_start + mj.width]
+            found_t = mm_tiles[:, mj.col_start + mj.width] != 0
+            bits, found = combine_minmax_candidates(bits_t, found_t,
+                                                    mj.is_max)
+            mm_bits[mj.dest] = bits
+            mm_found[mj.dest] = found
 
-        out_masks = {m: masks_arr[kernel_masks_t.index(m)]
-                     for m in mask_outputs}
-        return {"masks": out_masks, "sums": sums,
+        out_masks = {m: masks_arr[mask_outputs_t.index(m)]
+                     for m in mask_outputs_t}
+        return {"masks": out_masks, "job_pc": job_pc,
                 "mm_bits": mm_bits, "mm_found": mm_found}
 
     return _run

@@ -28,7 +28,13 @@ from .compiler import Agg, And, Compiler, predicate_attrs
 
 @dataclasses.dataclass
 class RelationRun:
-    """Per-relation outcome of a query."""
+    """Per-relation outcome of a query.
+
+    The ``agg_plane_reads*`` counters come from the fused executor's
+    reduce plan: aggregate-plane tile reads per pass with grouped
+    popcounts vs one read per ReduceSum/MinMax (the pre-grouping
+    executor) — zero on eager/baseline runs, which have no plan.
+    """
     n_records: int
     mask: np.ndarray
     trace: List[isa.PimInstruction]
@@ -36,6 +42,9 @@ class RelationRun:
     filter_attr_bits: List[int]
     filter_attr_sels: List[float]
     agg_attr_bits: List[int]
+    agg_plane_reads: int = 0
+    agg_plane_reads_ungrouped: int = 0
+    n_reduce_jobs: int = 0
 
 
 @dataclasses.dataclass
@@ -112,7 +121,9 @@ class PimDatabase:
 
     def _relation_run(self, rel: eng.PimRelation, rel_name: str,
                       spec: Q.QuerySpec, pred, mask: np.ndarray,
-                      trace: List[isa.PimInstruction]) -> RelationRun:
+                      trace: List[isa.PimInstruction],
+                      cp: Optional[prog.CompiledProgram] = None
+                      ) -> RelationRun:
         cols = self.tables[rel_name]
         attrs = predicate_attrs(pred)
         sels = _conjunct_selectivities(cols, pred, rel.n_records)
@@ -126,7 +137,11 @@ class PimDatabase:
             n_records=rel.n_records, mask=mask, trace=trace,
             selectivity=float(mask.mean()) if mask.size else 0.0,
             filter_attr_bits=[rel.width_of(a) for a in attrs],
-            filter_attr_sels=sels, agg_attr_bits=agg_bits)
+            filter_attr_sels=sels, agg_attr_bits=agg_bits,
+            agg_plane_reads=cp.agg_plane_reads if cp else 0,
+            agg_plane_reads_ungrouped=(cp.agg_plane_reads_ungrouped
+                                       if cp else 0),
+            n_reduce_jobs=cp.n_reduce_jobs if cp else 0)
 
     def run_pim(self, spec: Q.QuerySpec, fused: bool = True) -> QueryRun:
         """Execute a query on the PIM copy.
@@ -145,6 +160,7 @@ class PimDatabase:
             rel = self.relations[rel_name]
             c, mask_reg, group_regs = self._compile_relation(rel, spec, pred)
 
+            cp = None
             if fused:
                 cp = prog.compile_program(rel, c.program,
                                           mask_outputs=(mask_reg,),
@@ -166,7 +182,7 @@ class PimDatabase:
                 mask = e.read_mask(mask_reg)[: rel.n_records]
 
             rel_runs[rel_name] = self._relation_run(
-                rel, rel_name, spec, pred, mask, list(c.program))
+                rel, rel_name, spec, pred, mask, list(c.program), cp=cp)
         return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
 
     # -- baseline (numpy scan oracle) ----------------------------------------

@@ -3,37 +3,49 @@
 Where ``bitwise_filter.py`` evaluates one predicate per launch, this kernel
 evaluates an *arbitrary compiled program DAG* — every comparison, mask
 combine and bit-serial arithmetic op the ``db.compiler`` emitted for one
-relation, plus the masked per-bit popcounts of every ``ReduceSum`` — over a
-single ``(n_bits, BLOCK_W)`` tile stream. Each grid step stages one tile of
-every *touched* source plane into VMEM exactly once; the unrolled op
-sequence (immediates specialise it at trace time, paper Algorithm 1) runs
-entirely on VPU registers; outputs are the packed result masks plus one row
-of int32 popcount partials per tile. One HBM pass per relation program —
-the TPU rendition of the paper's "whole query inside the array with a
-single readout" claim.
+relation — over a single ``(n_bits, BLOCK_W)`` tile stream, plus **every
+reduce** of the program:
 
-Register liveness from ``core.program.analyze_program`` is honoured inside
-the kernel body: dead masks/derived planes are dropped mid-program so the
-per-tile VMEM working set tracks ``peak_live_planes``, not the program
-total.
+* **Grouped popcounts** (``SumJob``): all ReduceSums sharing a source
+  plane stack run as ONE job — each tile of the aggregate planes is
+  popcounted once against the whole *stack* of group masks, and the
+  per-(group, bit) int32 partials accumulate into a VMEM-resident
+  accumulator block (constant output index map: the ``(1, n_pc)`` block is
+  revisited every grid step, zeroed at step 0). TPC-H Q1's 6 group masks
+  cost one read of each aggregate plane per tile instead of six — the
+  paper's grouped aggregation inside the array (arXiv:2307.00658 §4).
+* **MIN/MAX** (``MinMaxJob``): per-tile MSB-first candidate narrowing at
+  the instruction's program position, emitting ``width`` candidate bits +
+  a found flag per tile; the surrounding jit reduces them with the same
+  cross-candidate combine the distributed path applies across shards
+  (``core.distributed.combine_minmax_candidates``).
 
-VMEM budget per grid step: (source rows + peak live planes) x BLOCK_W x 4 B
-— the worst evaluated program (TPC-H Q1: ~55 source + ~90 live derived
-planes) stays under 1.5 MiB at BLOCK_W = 2048.
+Each grid step stages one tile of every *touched* source plane into VMEM
+exactly once; the unrolled op sequence (immediates specialise it at trace
+time, paper Algorithm 1) runs entirely on VPU registers. Register liveness
+from ``core.program.plan_reduces`` (extended across grouped-job deferral)
+is honoured inside the kernel body via the precomputed ``frees`` table, so
+the per-tile VMEM working set tracks ``peak_live_planes``.
+
+VMEM budget per grid step: (source rows + peak live planes) x BLOCK_W x
+4 B plus the (1, n_pc) accumulator — the worst evaluated program (TPC-H
+Q1: ~55 source + ~90 live derived planes, ~200 accumulator columns) stays
+under 1.5 MiB at BLOCK_W = 2048.
 
 Distributed execution (``core.distributed.shard_program_fn``) wraps the
 whole program function — this kernel included — in ``shard_map``: the
 kernel then sees only its shard's word slice (``W / n_shards``, still a
 multiple of a power of two, so ``pick_block`` always finds a dividing
-block), emits per-shard popcount partials that are psum-combined in the
-surrounding SPMD program, and writes its shard of each output mask. The
-valid plane rides along as the last stacked row per shard, so padding
-words beyond ``n_records`` are masked off locally wherever they live.
+block), its popcount accumulators are psum-combined per grouped job and
+its per-shard MIN/MAX candidates gathered + combined in the surrounding
+SPMD program, and it writes its shard of each output mask. The valid
+plane rides along as the last stacked row per shard, so padding words
+beyond ``n_records`` are masked off locally wherever they live.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, FrozenSet, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,37 +57,59 @@ U32 = jnp.uint32
 BLOCK_W = 2048
 
 
-def _program_kernel(stacked_ref, masks_ref, pc_ref, *, instrs, attr_rows,
-                    valid_row, mask_outputs, pc_jobs, sum_slices,
-                    last_use, keep):
-    from repro.core.program import BitwiseEvaluator, instruction_reads
+def _program_kernel(stacked_ref, masks_ref, pc_ref, mm_ref, *, instrs,
+                    attr_rows, valid_row, mask_outputs, sum_jobs, mm_jobs,
+                    frees):
+    from repro.core.program import BitwiseEvaluator, _reduce_minmax_bits
 
     allp = stacked_ref[...]                      # (rows, block_w) in VMEM
     ev = BitwiseEvaluator(lambda a: allp[attr_rows[a][0]:attr_rows[a][1]],
                           allp[valid_row])
-    sum_i = 0
+
+    # Per-(group, bit) popcount accumulators live in the revisited output
+    # block across the whole grid; zero them on the first tile.
+    @pl.when(pl.program_id(0) == 0)
+    def _zero_accumulators():
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+
+    jobs_at: Dict[int, List] = {}
+    for job in sum_jobs:
+        jobs_at.setdefault(job.exec_at, []).append(job)
+    mm_at = {mj.exec_at: mj for mj in mm_jobs}
+
     for i, ins in enumerate(instrs):
         if ins.kind == "ReduceSum":
-            start, end = sum_slices[sum_i]
-            sum_i += 1
-            if end > start:
-                # Columns start..end are bits 0..n of this reduce's operand;
-                # one vectorised masked popcount over the whole plane stack.
-                p = ev.planes(pc_jobs[start][1])
-                m = ev.masks[ins.mask]
-                pc_ref[0, start:end] = jnp.sum(
-                    _popcount(m[None] & p).astype(jnp.int32), axis=1)
+            pass                                 # runs at its job's exec_at
         elif ins.kind == "ReduceMinMax":
-            pass                                 # narrowed outside the kernel
+            mj = mm_at[i]
+            bits, found = _reduce_minmax_bits(
+                ev.planes(mj.attr)[:mj.width], ev.masks[mj.mask], mj.is_max)
+            mm_ref[0, mj.col_start:mj.col_start + mj.width] = bits
+            mm_ref[0, mj.col_start + mj.width] = found.astype(jnp.int32)
         else:
             ev.execute(ins)
-        for r in instruction_reads(ins):
-            if last_use.get(r) == i and r not in keep:
-                ev.free(r)
-    if not pc_jobs:
-        pc_ref[0, 0] = jnp.int32(0)
+        for job in jobs_at.get(i, ()):
+            # ONE read of each aggregate plane for the whole mask stack.
+            # Deliberately a per-bit loop rather than
+            # engine.reduce_sum_bits_grouped (the jnp lowering's form of
+            # the same contract): that would stage a (g, width, block_w)
+            # intermediate in VMEM; this bounds it to (g, block_w).
+            p = ev.planes(job.attr)
+            g = len(job.masks)
+            mstack = jnp.stack([ev.masks[m] for m in job.masks])
+            for b in range(job.width):
+                pcb = jnp.sum(_popcount(mstack & p[b][None, :])
+                              .astype(jnp.int32), axis=1)
+                s = job.col_start + b * g
+                pc_ref[0, s:s + g] += pcb
+        for r in frees[i]:
+            ev.free(r)
+    if not mm_jobs:
+        mm_ref[0, 0] = jnp.int32(0)
     for k, name in enumerate(mask_outputs):
         masks_ref[k, :] = ev.masks[name]
+    if not mask_outputs:
+        masks_ref[0, :] = jnp.zeros_like(masks_ref[0, :])
 
 
 def fused_program(stacked: jax.Array, *,
@@ -83,39 +117,51 @@ def fused_program(stacked: jax.Array, *,
                   attr_rows: Mapping[str, Tuple[int, int]],
                   valid_row: int,
                   mask_outputs: Tuple[str, ...],
-                  pc_jobs: Tuple[Tuple[str, str, int], ...],
-                  sum_slices: Tuple[Tuple[int, int], ...],
-                  last_use: Dict[str, int],
-                  keep: FrozenSet[str],
+                  sum_jobs: Sequence,
+                  mm_jobs: Sequence,
+                  frees: Tuple[Tuple[str, ...], ...],
+                  n_pc_cols: int,
+                  n_mm_cols: int,
                   block_w: int = BLOCK_W,
                   interpret: bool = False):
     """Run a whole compiled relation program in one kernel launch.
 
     stacked: (rows, W) uint32 — every touched source bit-plane + the valid
-    plane at ``valid_row``. ``sum_slices`` gives each ReduceSum (in program
-    order) its contiguous column range in ``pc_jobs``. Returns
-    ``(masks, partials)`` where ``masks`` is (len(mask_outputs), W) packed
-    uint32 and ``partials`` is (n_tiles, n_pc) int32 per-tile popcount
-    partial sums, one column per ``pc_jobs`` entry (mask, attr, bit).
+    plane at ``valid_row``. ``sum_jobs``/``mm_jobs`` are the
+    ``core.program.plan_reduces`` jobs (grouped popcounts + per-tile
+    MIN/MAX); ``frees`` maps each instruction index to the registers that
+    die right after it. Returns ``(masks, pc_totals, mm_tiles)``:
+
+    * ``masks`` — (len(mask_outputs), W) packed uint32 result masks;
+    * ``pc_totals`` — (1, n_pc_cols) int32 popcount totals, already
+      accumulated over every tile, column ``job.col_start + b * n_groups
+      + g`` holding (bit b, group g) of its job;
+    * ``mm_tiles`` — (n_tiles, n_mm_cols) int32 per-tile MIN/MAX
+      candidate bits + found flags, for the caller's cross-tile combine.
     """
     rows, w = stacked.shape
     block_w = _pick_block(w, block_w)
-    grid = (w // block_w,)
-    n_pc = max(1, len(pc_jobs))
+    n_tiles = w // block_w
+    grid = (n_tiles,)
+    n_pc = max(1, n_pc_cols)
+    n_mm = max(1, n_mm_cols)
+    n_mask_rows = max(1, len(mask_outputs))
 
     kernel = functools.partial(
         _program_kernel, instrs=tuple(instrs), attr_rows=dict(attr_rows),
         valid_row=valid_row, mask_outputs=tuple(mask_outputs),
-        pc_jobs=tuple(pc_jobs), sum_slices=tuple(sum_slices),
-        last_use=dict(last_use), keep=frozenset(keep))
-    masks, partials = pl.pallas_call(
+        sum_jobs=tuple(sum_jobs), mm_jobs=tuple(mm_jobs),
+        frees=tuple(frees))
+    masks, pc_totals, mm_tiles = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((rows, block_w), lambda i: (0, i))],
-        out_specs=[pl.BlockSpec((len(mask_outputs), block_w), lambda i: (0, i)),
-                   pl.BlockSpec((1, n_pc), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((len(mask_outputs), w), U32),
-                   jax.ShapeDtypeStruct((w // block_w, n_pc), jnp.int32)],
+        out_specs=[pl.BlockSpec((n_mask_rows, block_w), lambda i: (0, i)),
+                   pl.BlockSpec((1, n_pc), lambda i: (0, 0)),
+                   pl.BlockSpec((1, n_mm), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_mask_rows, w), U32),
+                   jax.ShapeDtypeStruct((1, n_pc), jnp.int32),
+                   jax.ShapeDtypeStruct((n_tiles, n_mm), jnp.int32)],
         interpret=interpret,
     )(stacked)
-    return masks, partials
+    return masks, pc_totals, mm_tiles

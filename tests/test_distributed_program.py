@@ -64,6 +64,52 @@ def test_distributed_fused_parity_all_queries():
     assert "PARITY-OK 21" in out
 
 
+def test_distributed_pallas_inkernel_reduces():
+    """The Pallas program kernel's in-kernel reduces compose with
+    shard_map: grouped per-(group, bit) popcount accumulators psum across
+    shards, per-tile MIN/MAX candidates combine across tiles *and* shards
+    — and MIN/MAX over an empty selection still surfaces as None through
+    the in-kernel distributed-fused path (PR 1 regression, extended)."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.db import database, queries, tpch
+        from repro.db.compiler import Agg, Cmp, Col, Lit
+
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        tables = tpch.generate(sf=0.002, seed=123)
+        db1 = database.PimDatabase(tables)
+        dbp = database.PimDatabase(tables, backend="pallas", mesh=mesh)
+
+        specs = [queries.get_query("Q6"), queries.get_query("Q22_sub")]
+        specs.append(queries.QuerySpec(
+            "Qmm_empty", "full",
+            filters={"customer": Cmp("gt", Col("c_acctbal"), Lit(1 << 40))},
+            agg_relation="customer",
+            aggregates=[Agg("min", Col("c_acctbal"), "mn"),
+                        Agg("max", Col("c_acctbal"), "mx"),
+                        Agg("sum", Col("c_acctbal"), "s"),
+                        Agg("count", None, "c")]))
+        specs.append(queries.QuerySpec(
+            "Qmm", "full",
+            filters={"lineitem": Cmp("lt", Col("l_quantity"), Lit(10))},
+            agg_relation="lineitem",
+            aggregates=[Agg("min", Col("l_extendedprice"), "mn"),
+                        Agg("max", Col("l_extendedprice"), "mx"),
+                        Agg("count", None, "c")]))
+        for spec in specs:
+            dist = dbp.run_pim(spec, fused=True)
+            base = db1.run_baseline(spec)
+            for rel in spec.filters:
+                np.testing.assert_array_equal(
+                    dist.relations[rel].mask, base.relations[rel].mask,
+                    err_msg=spec.name)
+            assert dist.aggregates == base.aggregates, spec.name
+        assert dist.aggregates["all"]["c"] > 0        # Qmm really selected
+        print("PALLAS-DIST-OK", len(specs))
+    """)
+    assert "PALLAS-DIST-OK 4" in out
+
+
 def test_distributed_program_single_dispatch_and_sharded_outputs():
     """The sharded compiled program stays ONE logical dispatch, its mask
     outputs stay record-sharded (no gather for pure filters), and its

@@ -88,7 +88,10 @@ def test_liveness_shrinks_live_planes(db):
 
 def test_empty_selection_minmax_is_none(db, db_pallas):
     """MIN/MAX over an empty selection: the ReduceMinMax found flag must
-    surface as None (previously a garbage 0/all-ones value)."""
+    surface as None (previously a garbage 0/all-ones value) — including
+    through the Pallas path, where narrowing now runs *inside* the kernel
+    per tile and no tile raises the found flag (the distributed-fused
+    side lives in test_distributed_program.py)."""
     spec = queries.QuerySpec(
         "Qmm_empty", "full",
         filters={"customer": Cmp("gt", Col("c_acctbal"), Lit(1 << 40))},
