@@ -5,9 +5,11 @@ executed via XLA on this host) against a numpy full-width column scan —
 the same records/second comparison the paper makes, realised on vector
 hardware. Also times the fused filter+aggregate path vs the paper-faithful
 two-phase (filter, then masked reduce) execution, the whole-program fused
-executor vs the eager engine (TPC-H Q6), and the grouped-aggregation
+executor vs the eager engine (TPC-H Q6), the grouped-aggregation
 executor on TPC-H Q1 (per-pass aggregate-plane reads: grouped popcounts
-vs one read per ReduceSum).
+vs one read per ReduceSum), and the end-to-end query subsystem on TPC-H
+Q3/Q14 (PIM filter + materialize dispatch vs host join/agg/order wall
+split, with the materialized-row count as a gated counter).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -159,7 +161,42 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
                  peak_live_planes=cp.peak_live_planes,
                  total_reg_planes=cp.total_reg_planes)]
     rows.extend(bench_q1_grouped(db))
+    rows.extend(bench_e2e(db))
     rows.extend(bench_distributed_program(db, spec))
+    return rows
+
+
+def bench_e2e(db) -> List[dict]:
+    """End-to-end queries (PIM filter + in-dispatch materialization +
+    host join/agg/order): per-stage wall split and the materialized-row
+    counter (a deterministic gate — the PIM stage must keep handing the
+    host only the selected records, not the relation)."""
+    from repro.db import exec as E
+    from repro.db import queries
+
+    rows: List[dict] = []
+    for qname in ("Q3", "Q14"):
+        spec = queries.get_query(qname)
+        t0 = time.perf_counter()
+        first = db.run_query(spec)            # pays the XLA compiles
+        cold = (time.perf_counter() - t0) * 1e6
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = db.run_query(spec)
+        warm = (time.perf_counter() - t0) / reps * 1e6
+        base = E.run_host_stage(spec.host,
+                                E.baseline_context(db.tables, spec))
+        base_rows = [tuple(int(base.columns[c][i]) for c in res.columns)
+                     for i in range(base.n_rows)]
+        rows.append(_row(
+            f"{qname.lower()}_e2e", warm, cold,
+            pim_us=round(res.pim_s * 1e6),
+            host_us=round(res.host_s * 1e6),
+            materialized_rows=res.total_materialized,
+            result_rows=len(res.rows),
+            relations=len(res.materialized_rows),
+            exact=res.rows == base_rows and first.rows == base_rows))
     return rows
 
 

@@ -30,6 +30,12 @@ GATES = [
     ("q1_grouped", "meta.dispatches", "count"),
     ("q1_grouped", "meta.plane_reads_grouped", "count"),
     ("q1_grouped", "meta.reduce_jobs", "count"),
+    # End-to-end rows: the PIM stage must keep handing the host only the
+    # selected records — growth here means selection pushdown regressed.
+    ("q3_e2e", "warm_us", "time"),
+    ("q14_e2e", "warm_us", "time"),
+    ("q3_e2e", "meta.materialized_rows", "count"),
+    ("q14_e2e", "meta.materialized_rows", "count"),
 ]
 
 

@@ -8,7 +8,7 @@ table/figure reports.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

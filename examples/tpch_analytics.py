@@ -3,7 +3,10 @@
 Generates TPC-H at a small scale factor, executes the paper's query set on
 the bulk-bitwise engine AND the column-scan baseline, verifies equality,
 and prints the paper-scale (SF=1000) modeled speedup/energy/endurance —
-the numbers Figs. 8/11/15 report.
+the numbers Figs. 8/11/15 report. Queries with a host stage then run END
+TO END (PIM filter + in-dispatch materialization + host join/agg/order),
+and the full decoded result rows of one joined query (Q3 by default) are
+printed — the part of the pipeline the paper leaves to the host.
 
     PYTHONPATH=src python examples/tpch_analytics.py [--sf 0.01]
 """
@@ -16,6 +19,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sf", type=float, default=0.003)
     ap.add_argument("--queries", nargs="*", default=None)
+    ap.add_argument("--e2e", default="Q3",
+                    help="query whose full joined result rows to print")
     args = ap.parse_args()
 
     print(f"generating TPC-H sf={args.sf} ...")
@@ -32,11 +37,29 @@ def main():
         ok = all((pim.relations[r].mask == base.relations[r].mask).all()
                  for r in spec.filters) and pim.aggregates == base.aggregates
         rep = database.cost_report(pim, sf_scale=1000 / args.sf)
-        print(f"{spec.name:9s} {spec.kind:7s} {rep.cycles['total']:>9d} "
+        e2e = " +host" if spec.host is not None else ""
+        print(f"{spec.name:9s} {spec.kind + e2e:13s} {rep.cycles['total']:>9d} "
               f"{rep.speedup:>8.1f} {rep.read_reduction:>8.1f} "
               f"{rep.energy_saving:>7.2f} "
               f"{rep.endurance_ops_per_cell_10y:>10.2e} "
               f"{'✓' if ok else 'MISMATCH'}")
+
+    # Full end-to-end result rows of one joined query: the PIM stage hands
+    # the host only the selected records (materialized in-dispatch), the
+    # host completes join/group/order, and the rows decode back to
+    # currency/dates/strings.
+    spec = queries.get_query(args.e2e)
+    if spec.host is None:
+        print(f"\n{spec.name} has no host stage; pick one of "
+              f"{[q.name for q in queries.all_queries() if q.host]}")
+        return
+    res = db.run_query(spec)
+    mat = ", ".join(f"{r}:{n}" for r, n in res.materialized_rows.items())
+    print(f"\n== {spec.name} end to end: PIM stage {res.pim_s * 1e3:.1f} ms "
+          f"(materialized rows {mat}), host stage {res.host_s * 1e3:.1f} ms ==")
+    print(" | ".join(f"{c:>16s}" for c in res.columns))
+    for row in res.decoded_rows():
+        print(" | ".join(f"{str(v):>16s}" for v in row))
 
 
 if __name__ == "__main__":

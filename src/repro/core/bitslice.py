@@ -19,7 +19,7 @@ relation's ``valid`` plane (the paper's added *valid attribute*, §5.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Mapping
+from typing import Dict, Mapping
 
 import numpy as np
 

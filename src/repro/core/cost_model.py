@@ -20,7 +20,7 @@ calibration is auditable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 from . import isa
 from .bitslice import CROSSBAR_COLS, CROSSBAR_ROWS
@@ -108,7 +108,7 @@ def classify_program(trace: Sequence[isa.PimInstruction]) -> ProgramCost:
             cost.cycles_filter += c
         elif k in _ARITH_KINDS:
             cost.cycles_arith += c
-        elif k == "ColumnTransform":
+        elif k in ("ColumnTransform", "Materialize"):
             cost.cycles_col_transform += c
         elif k in ("ReduceSum", "ReduceMinMax"):
             cost.cycles_reduce_row += ins.row_cycles()

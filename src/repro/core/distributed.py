@@ -60,7 +60,6 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -196,7 +195,8 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
                      source_attrs: Sequence[str],
                      mask_outputs: Sequence[str],
                      pc_job_keys: Sequence[str],
-                     mm_items: Sequence[Tuple[str, bool]]) -> Callable:
+                     mm_items: Sequence[Tuple[str, bool]],
+                     mat_items: Sequence[str] = ()) -> Callable:
     """Lift a compiled per-relation program function to SPMD on ``mesh``.
 
     ``local_fn(planes dict, valid) -> {"masks", "job_pc", "mm_bits",
@@ -208,8 +208,14 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
     collective per source plane stack, however many group masks share it
     — and per-shard MIN/MAX candidate bits are gathered and reduced by
     :func:`combine_minmax_candidates`, the same combine the kernel's
-    cross-tile reduction uses one level down. Exactly ONE logical
-    dispatch per relation program once jitted.
+    cross-tile reduction uses one level down. ``mat_items`` names the
+    Materialize outputs: each shard compacts its own selected records
+    against its local mask slice (masks never leave a device unsharded),
+    the value buffer stays word-axis-sharded — shard ``s`` owns capacity
+    columns ``[s*cap, (s+1)*cap)`` — and the per-shard counts come back
+    as one ``(n_shards,)`` vector for the host-side prefix stitch
+    (``ProgramResult.materialized``). No collective touches the values.
+    Exactly ONE logical dispatch per relation program once jitted.
     """
     ax = mesh_shard_axes(mesh, shard_axes)
     in_specs = ({a: P(None, ax) for a in source_attrs}, P(ax))
@@ -218,6 +224,8 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
         "job_pc": {k: P() for k in pc_job_keys},
         "mm_bits": {d: P() for d, _ in mm_items},
         "mm_found": {d: P() for d, _ in mm_items},
+        "mat_vals": {d: P(None, ax) for d in mat_items},
+        "mat_cnt": {d: P(ax) for d in mat_items},
     }
 
     @partial(shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
@@ -233,6 +241,8 @@ def shard_program_fn(local_fn: Callable, mesh: Mesh,
             mm_bits[d], mm_found[d] = combine_minmax_candidates(gb, gf,
                                                                 is_max)
         return {"masks": {m: raw["masks"][m] for m in mask_outputs},
-                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found}
+                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found,
+                "mat_vals": {d: raw["mat_vals"][d] for d in mat_items},
+                "mat_cnt": {d: raw["mat_cnt"][d] for d in mat_items}}
 
     return _run

@@ -18,10 +18,8 @@ can charge paper-faithful cycles/energy/endurance afterwards.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, List, Mapping, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -299,6 +297,7 @@ class Engine:
         self.masks: Dict[str, jnp.ndarray] = {"__valid__": relation.valid}
         self.derived: Dict[str, jnp.ndarray] = {}
         self.found: Dict[str, bool] = {}     # ReduceMinMax empty-selection flags
+        self.materialized: Dict[str, Dict[str, np.ndarray]] = {}
         self.trace: List[isa.PimInstruction] = []
         if backend == "pallas":
             from repro.kernels import ops as kops   # lazy; optional path
@@ -416,6 +415,16 @@ class Engine:
             v, found = fn(self._planes(instr.attr), self.masks[instr.mask])
             self.derived[instr.dest] = v
             self.found[instr.dest] = found
+        elif kind == "Materialize":
+            # Eager oracle of the materialization kernel: host-side
+            # unpack + gather (np.asarray gathers sharded arrays too).
+            sel = bitslice.unpack_mask(np.asarray(self.masks[instr.mask]),
+                                       self.rel.n_records)
+            self.materialized[instr.dest] = {
+                a: bitslice.unpack_bits(np.asarray(self._planes(a)),
+                                        self.rel.n_records)[sel]
+                .astype(np.int64)
+                for a in instr.attrs}
         elif kind == "ColumnTransform":
             # In the bit-plane layout the mask is already packed row-wise:
             # the transform is the readout itself. Kept as a traced no-op so
@@ -442,6 +451,11 @@ class Engine:
         if not self.found.get(name, True):
             return None
         return int(np.asarray(self.derived[name]))
+
+    def read_materialized(self, name: str) -> Dict[str, np.ndarray]:
+        """Materialized column values ({attr: (count,) int64}, record
+        order) of one executed Materialize instruction."""
+        return self.materialized[name]
 
     def count(self, mask: str):
         return int(reduce_count(self.masks[mask] & self.rel.valid))

@@ -293,6 +293,35 @@ class ReduceMinMax(PimInstruction):
 
 
 @dataclasses.dataclass(frozen=True)
+class Materialize(PimInstruction):
+    """Read the mask-selected records of ``attrs`` back as integer values
+    (the inverse of ``bitslice.pack``): compact selected records and
+    re-orient their bit-sliced planes into row-major column values.
+
+    PIMDB stores records row-major inside each crossbar, so selection
+    readout is one column-transform of the *mask* (to locate selected
+    rows densely, Fig. 6) followed by row-wise reads of the matching
+    records — the reads themselves are off-chip traffic, not crossbar
+    cycles. ``n_bits`` records the readout width (total planes across
+    ``attrs``): bytes-per-selected-record for traffic accounting, which
+    ``cost_report`` does not yet charge (it models the paper's original
+    filter/aggregate readout only).
+    """
+    attrs: Tuple[str, ...] = ()
+    mask: str = ""
+    n_bits: int = 0
+
+    def cycles(self) -> int:
+        return 2050                     # the mask column-transform
+
+    def intermediate_cells(self) -> int:
+        return 1
+
+    def row_cycles(self) -> int:
+        return 1024
+
+
+@dataclasses.dataclass(frozen=True)
 class ColumnTransform(PimInstruction):
     """Re-orient a result-bit column into packed rows for efficient
     readout (Fig. 6). Fixed cost for a 1024x512 crossbar."""

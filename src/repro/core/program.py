@@ -79,6 +79,8 @@ def instruction_reads(ins: isa.PimInstruction) -> List[str]:
         return []
     if k in _REDUCE_KINDS:
         return [ins.attr, ins.mask]
+    if k == "Materialize":
+        return [*ins.attrs, ins.mask]
     if k == "ColumnTransform":
         return [ins.mask]
     raise ValueError(f"unknown instruction {k}")
@@ -126,6 +128,10 @@ def analyze_program(instrs: Sequence[isa.PimInstruction],
         k = ins.kind
         if k in _REDUCE_KINDS:
             reg_kind[ins.dest] = "scalar"
+            widths[ins.dest] = 0
+        elif k == "Materialize":
+            # Materialized values live in the readout path, not in planes.
+            reg_kind[ins.dest] = "values"
             widths[ins.dest] = 0
         elif k in _DERIVED_KINDS:
             reg_kind[ins.dest] = "derived"
@@ -524,6 +530,9 @@ class CompiledProgram:
     _fn: Callable                          # (planes dict, valid) -> raw out
     mesh: Optional[Mesh] = None
     shard_axes: Optional[Tuple[str, ...]] = None
+    # Materialize dest -> the attribute tuple it decodes (readout order).
+    mat_attrs: Mapping[str, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def n_dispatches(self) -> int:
@@ -596,6 +605,31 @@ class ProgramResult:
             return sum(int(bits[b]) << b for b in range(bits.shape[0]))
         raise KeyError(name)
 
+    def materialized_count(self, name: str) -> int:
+        """Selected-record count of one Materialize output (all shards)."""
+        return int(np.asarray(self._raw["mat_cnt"][name]).sum())
+
+    def materialized(self, name: str) -> Dict[str, np.ndarray]:
+        """Decoded column values of one Materialize output.
+
+        Returns ``{attr: (count,) int array}`` in record order. The value
+        buffer is the one output ``run_program`` leaves on device: only
+        the ``count``-row prefixes are sliced out before the host copy,
+        so readback traffic is O(selected records), not O(relation) —
+        the readout-reduction the subsystem exists for. Under a mesh the
+        buffer is word-axis-sharded (shard s owns columns ``[s*cap,
+        (s+1)*cap)`` with its own count) and the per-shard prefixes are
+        stitched here — the mask never leaves the devices unsharded.
+        """
+        vals = self._raw["mat_vals"][name]       # device-resident
+        cnts = np.asarray(self._raw["mat_cnt"][name]).ravel()
+        cap = vals.shape[1] // cnts.shape[0]
+        dense = np.concatenate(
+            [np.asarray(vals[:, s * cap:s * cap + int(cnts[s])])
+             for s in range(cnts.shape[0])], axis=1)
+        attrs = self._cp.mat_attrs[name]
+        return {a: dense[i] for i, a in enumerate(attrs)}
+
 
 def compile_program(relation: eng.PimRelation,
                     program: Sequence[isa.PimInstruction],
@@ -625,12 +659,21 @@ def compile_program(relation: eng.PimRelation,
         interpret = jax.default_backend() != "tpu"
 
     scalar_kinds: Dict[str, tuple] = {}
+    mat_attrs: Dict[str, Tuple[str, ...]] = {}
+    mat_masks: List[str] = []
     for ins in instrs:
         if ins.kind == "ReduceSum":
             scalar_kinds[ins.dest] = ("sum",)
         elif ins.kind == "ReduceMinMax":
             scalar_kinds[ins.dest] = ("minmax", ins.is_max)
-    analysis = analyze_program(instrs, relation, keep=mask_outputs)
+        elif ins.kind == "Materialize":
+            mat_attrs[ins.dest] = tuple(ins.attrs)
+            if ins.mask not in mat_masks:
+                mat_masks.append(ins.mask)
+    # Materialize masks are read out of the filter kernel (the pallas
+    # lowering feeds them to the materialize kernel), so pin them live.
+    keep = mask_outputs + tuple(m for m in mat_masks if m not in mask_outputs)
+    analysis = analyze_program(instrs, relation, keep=keep)
     widths = {a: relation.width_of(a) for a in analysis.source_attrs}
     plan = plan_reduces(instrs, analysis, widths)
 
@@ -655,21 +698,30 @@ def compile_program(relation: eng.PimRelation,
                 mask_outputs=mask_outputs,
                 pc_job_keys=plan.job_keys(),
                 mm_items=tuple((d, k[1]) for d, k in scalar_kinds.items()
-                               if k[0] == "minmax"))
+                               if k[0] == "minmax"),
+                mat_items=tuple(mat_attrs))
         fn = jax.jit(fn)
         _FN_CACHE.put(sig, fn)
 
     return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
                            plan, backend, relation.layout.n_words, fn,
-                           mesh=mesh, shard_axes=shard_axes)
+                           mesh=mesh, shard_axes=shard_axes,
+                           mat_attrs=mat_attrs)
 
 
 def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult:
     """Execute a compiled program: ONE device dispatch for the whole
-    relation program, then exact host-side weighting of the popcounts."""
+    relation program, then exact host-side weighting of the popcounts.
+
+    Materialize value buffers stay on device — their capacity is the
+    padded record count, and ``ProgramResult.materialized`` copies out
+    only each shard's ``count``-row prefix."""
     planes = {a: relation.planes[a] for a in cp.analysis.source_attrs}
-    raw = cp._fn(planes, relation.valid)
-    return ProgramResult(cp, jax.device_get(raw), relation.n_records)
+    raw = dict(cp._fn(planes, relation.valid))
+    mat_vals = raw.pop("mat_vals")
+    host = jax.device_get(raw)
+    host["mat_vals"] = mat_vals
+    return ProgramResult(cp, host, relation.n_records)
 
 
 # --------------------------------------------------------------------------
@@ -677,6 +729,8 @@ def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult
 # --------------------------------------------------------------------------
 def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
                   plan: ReducePlan):
+    from repro.kernels import materialize as kmat  # jnp lowering lives there
+
     keep = frozenset(mask_outputs)
     frees = frees_by_instr(len(instrs), plan.last_use, keep)
     jobs_at: Dict[int, List[Tuple[int, SumJob]]] = {}
@@ -688,6 +742,8 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
         job_pc: Dict[str, jnp.ndarray] = {}
         mm_bits: Dict[str, jnp.ndarray] = {}
         mm_found: Dict[str, jnp.ndarray] = {}
+        mat_vals: Dict[str, jnp.ndarray] = {}
+        mat_cnt: Dict[str, jnp.ndarray] = {}
         for i, ins in enumerate(instrs):
             if ins.kind == "ReduceSum":
                 pass                   # runs at its grouped job's exec_at
@@ -696,6 +752,11 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
                     ev.planes(ins.attr), ev.masks[ins.mask], ins.is_max)
                 mm_bits[ins.dest] = bits
                 mm_found[ins.dest] = found
+            elif ins.kind == "Materialize":
+                mat_vals[ins.dest], mat_cnt[ins.dest] = \
+                    kmat.materialize_planes(
+                        [ev.planes(a) for a in ins.attrs],
+                        ev.masks[ins.mask])
             else:
                 ev.execute(ins)
             for j, job in jobs_at.get(i, ()):
@@ -705,7 +766,8 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
             for r in frees[i]:
                 ev.free(r)
         return {"masks": {m: ev.masks[m] for m in mask_outputs},
-                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found}
+                "job_pc": job_pc, "mm_bits": mm_bits, "mm_found": mm_found,
+                "mat_vals": mat_vals, "mat_cnt": mat_cnt}
 
     return _run
 
@@ -713,18 +775,33 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
 def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
                      widths: Dict[str, int], interpret: bool,
                      plan: ReducePlan):
+    from repro.kernels import materialize as kmat
     from repro.kernels import program as kprog  # lazy: optional path
     from .distributed import combine_minmax_candidates
 
     mask_outputs_t = tuple(mask_outputs)
+    mat_instrs = tuple(i for i in instrs if i.kind == "Materialize")
+    # The materialize kernel consumes filter masks, so the program kernel
+    # must emit them even when the caller asked for no mask readout.
+    kernel_masks = mask_outputs_t + tuple(dict.fromkeys(
+        m.mask for m in mat_instrs
+        if m.mask not in mask_outputs_t and m.mask != "__valid__"))
     frees = frees_by_instr(len(instrs), plan.last_use,
-                           frozenset(mask_outputs_t))
+                           frozenset(kernel_masks))
+
+    # Only attrs the filter/aggregate program actually reads ride the
+    # program kernel's tile stream; Materialize-only attrs would be
+    # staged through it untouched (their one pass is materialize_pallas).
+    kernel_reads = {r for ins in instrs if ins.kind != "Materialize"
+                    for r in instruction_reads(ins)}
+    kernel_attrs = tuple(a for a in analysis.source_attrs
+                         if a in kernel_reads)
 
     def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
         attr_rows: Dict[str, Tuple[int, int]] = {}
         rows = []
         r0 = 0
-        for a in analysis.source_attrs:
+        for a in kernel_attrs:
             p = planes[a]
             attr_rows[a] = (r0, r0 + p.shape[0])
             rows.append(p)
@@ -733,10 +810,20 @@ def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
         stacked = jnp.concatenate(rows, axis=0)
         masks_arr, pc_tot, mm_tiles = kprog.fused_program(
             stacked, instrs=instrs, attr_rows=attr_rows, valid_row=r0,
-            mask_outputs=mask_outputs_t, sum_jobs=plan.sum_jobs,
+            mask_outputs=kernel_masks, sum_jobs=plan.sum_jobs,
             mm_jobs=plan.mm_jobs, frees=frees,
             n_pc_cols=plan.n_pc_cols, n_mm_cols=plan.n_mm_cols,
             interpret=interpret)
+
+        # Second kernel launch, same jit dispatch: stream the materialized
+        # attributes' planes once more, compacting against the filter mask.
+        mat_vals: Dict[str, jnp.ndarray] = {}
+        mat_cnt: Dict[str, jnp.ndarray] = {}
+        for mi in mat_instrs:
+            mask = (valid if mi.mask == "__valid__"
+                    else masks_arr[kernel_masks.index(mi.mask)])
+            mat_vals[mi.dest], mat_cnt[mi.dest] = kmat.materialize_pallas(
+                [planes[a] for a in mi.attrs], mask, interpret=interpret)
 
         # Per-(bit, group) accumulator columns -> (n_groups, width) per job.
         job_pc = {f"j{j}": pc_tot[0, job.col_start:job.col_start + job.n_cols]
@@ -755,9 +842,10 @@ def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
             mm_bits[mj.dest] = bits
             mm_found[mj.dest] = found
 
-        out_masks = {m: masks_arr[mask_outputs_t.index(m)]
+        out_masks = {m: masks_arr[kernel_masks.index(m)]
                      for m in mask_outputs_t}
         return {"masks": out_masks, "job_pc": job_pc,
-                "mm_bits": mm_bits, "mm_found": mm_found}
+                "mm_bits": mm_bits, "mm_found": mm_found,
+                "mat_vals": mat_vals, "mat_cnt": mat_cnt}
 
     return _run

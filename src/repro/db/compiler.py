@@ -273,6 +273,26 @@ class Compiler:
             return final
         return out
 
+    def compile_scan_all(self) -> str:
+        """Constant-true selection (ANDed with the valid plane): the mask
+        a relation with no PIM predicate materializes under — every live
+        record, no padding rows."""
+        m = self.fresh("m")
+        self.program.append(isa.SetReset(dest=m, value=1))
+        out = self.fresh("m")
+        self.program.append(isa.BitwiseAnd(dest=out, src_a=m,
+                                           src_b="__valid__"))
+        return out
+
+    def compile_materialize(self, mask: str, attrs: Sequence[str]) -> str:
+        """Read the mask-selected records of ``attrs`` back as integers
+        (the PIM->host hand-off of the end-to-end query path)."""
+        dest = self.fresh("v")
+        n_bits = sum(self.rel.width_of(a) for a in attrs)
+        self.program.append(isa.Materialize(
+            dest=dest, attrs=tuple(attrs), mask=mask, n_bits=n_bits))
+        return dest
+
     def compile_aggregates(self, mask: str, aggs: Sequence[Agg]) -> Dict[str, Tuple[str, str]]:
         """Aggregate program on a filter mask (paper full-query path).
 

@@ -21,9 +21,10 @@ from repro.core import cost_model as cm
 from repro.core import engine as eng
 from repro.core import isa
 from repro.core import program as prog
+from . import exec as E
 from . import queries as Q
 from . import schema as S
-from .compiler import Agg, And, Compiler, predicate_attrs
+from .compiler import And, Compiler, predicate_attrs
 
 
 @dataclasses.dataclass
@@ -111,7 +112,11 @@ class PimDatabase:
             for name, (kind, reg) in regs.items():
                 if kind == "avg_pair":
                     s_reg, c_reg = reg.split("/")
-                    out[name] = (read_scalar(s_reg), read_scalar(c_reg))
+                    s, c = int(read_scalar(s_reg)), int(read_scalar(c_reg))
+                    # Empty-group avg is None on every path (eager, fused,
+                    # distributed, baseline) — never a 0/0 pair that turns
+                    # into a ZeroDivisionError or NaN downstream.
+                    out[name] = None if c == 0 else (s, c)
                 elif kind == "minmax":
                     out[name] = read_reduce(reg)
                 else:
@@ -185,6 +190,50 @@ class PimDatabase:
                 rel, rel_name, spec, pred, mask, list(c.program), cp=cp)
         return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
 
+    # -- end-to-end execution (PIM stage + host stage) -----------------------
+    def run_query(self, spec: Q.QuerySpec, fused: bool = True
+                  ) -> "QueryResult":
+        """Execute a query END TO END: PIM filters + in-dispatch
+        materialization hand the host only the selected records; the
+        host stage (``db.exec``) joins, applies residual predicates,
+        aggregates, and orders them into full TPC-H result rows.
+
+        fused=True compiles each relation's filter+materialize program
+        into one dispatch (sharded over the mesh when configured, masks
+        and value buffers staying on-device/sharded); fused=False runs
+        the eager engine as the oracle path.
+        """
+        pim_stage, host = E.split_query(spec)
+        t0 = time.perf_counter()
+        materialized: Dict[str, E.HostTable] = {}
+        mat_rows: Dict[str, int] = {}
+        for rel_name, pred, cols in pim_stage:
+            rel = self.relations[rel_name]
+            c = Compiler(rel)
+            mask_reg = (c.compile_filter(pred, with_transform=False)
+                        if pred is not None else c.compile_scan_all())
+            mat_reg = c.compile_materialize(mask_reg, cols)
+            if fused:
+                cp = prog.compile_program(rel, c.program, mask_outputs=(),
+                                          backend=self.backend,
+                                          mesh=self.mesh,
+                                          shard_axes=self.shard_axes)
+                vals = prog.run_program(cp, rel).materialized(mat_reg)
+            else:
+                e = eng.Engine(rel, backend=self.backend)
+                e.run(c.program)
+                vals = e.read_materialized(mat_reg)
+            materialized[rel_name] = E.HostTable(
+                {a: np.asarray(v, np.int64) for a, v in vals.items()})
+            mat_rows[rel_name] = materialized[rel_name].n_rows
+        pim_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        table = E.run_host_stage(host, E.ExecContext(materialized,
+                                                     self.tables))
+        host_s = time.perf_counter() - t0
+        return QueryResult.from_table(spec, table, pim_s, host_s, mat_rows)
+
     # -- baseline (numpy scan oracle) ----------------------------------------
     def run_baseline(self, spec: Q.QuerySpec) -> QueryRun:
         t0 = time.perf_counter()
@@ -204,6 +253,70 @@ class PimDatabase:
                 selectivity=float(mask.mean()),
                 filter_attr_bits=[], filter_attr_sels=[], agg_attr_bits=[])
         return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
+
+
+def avg_value(pair) -> Optional[float]:
+    """Finalize an exact avg (sum, count) pair into a float; an empty
+    group (already ``None`` from ``_finalize_aggs``/``eval_aggregate``)
+    stays ``None`` — never a ZeroDivisionError or NaN."""
+    if pair is None:
+        return None
+    s, c = pair
+    return s / c
+
+
+# Result columns that are derived money at cents x percent scale.
+_REVENUE_COLS = {"revenue", "promo_revenue"}
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Full end-to-end result rows of one query (PIM + host stages).
+
+    ``rows`` hold the exact PIM-encoded integers (``None`` for empty
+    min/max/avg) the oracle comparison uses; ``decoded_rows`` applies the
+    schema's presentation decoding (currency, ISO dates, dictionary
+    strings).
+    """
+    name: str
+    columns: Tuple[str, ...]
+    rows: List[tuple]
+    pim_s: float
+    host_s: float
+    materialized_rows: Dict[str, int]
+
+    @classmethod
+    def from_table(cls, spec, table: "E.HostTable", pim_s: float,
+                   host_s: float, mat_rows: Dict[str, int]) -> "QueryResult":
+        def cell(v):
+            if v is None:
+                return None
+            if isinstance(v, (float, np.floating)):   # host-stage avg
+                return float(v)
+            return int(v)
+
+        cols = tuple(table.columns)
+        rows = [tuple(cell(table.columns[c][i]) for c in cols)
+                for i in range(table.n_rows)]
+        return cls(spec.name, cols, rows, pim_s, host_s, dict(mat_rows))
+
+    def decoded_rows(self) -> List[tuple]:
+        out = []
+        for row in self.rows:
+            dec = []
+            for c, v in zip(self.columns, row):
+                if v is None:
+                    dec.append(None)
+                elif c in _REVENUE_COLS:
+                    dec.append(S.decode_revenue(v))
+                else:
+                    dec.append(S.decode_value(c, v))
+            out.append(tuple(dec))
+        return out
+
+    @property
+    def total_materialized(self) -> int:
+        return sum(self.materialized_rows.values())
 
 
 def predicate_attrs_of_expr(e) -> List[str]:

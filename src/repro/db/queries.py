@@ -12,16 +12,21 @@ PIM-encoded (dict ids, scaled cents, day offsets) via `schema.py`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import exec as E
 from . import schema as S
 from .compiler import (Agg, AddE, And, Between, Cmp, Col, InSet, Lit, Mul,
                        Not, Or, RSubImm)
 
 D = S.date_to_days
 NK = S.NATION_KEY
+
+# revenue = l_extendedprice * (1 - l_discount), at cents x percent scale
+# (schema.decode_revenue turns it back into currency).
+REVENUE = Mul(Col("l_extendedprice"), RSubImm(100, Col("l_discount")))
 
 
 @dataclasses.dataclass
@@ -32,6 +37,9 @@ class QuerySpec:
     agg_relation: Optional[str] = None
     aggregates: Sequence[Agg] = ()
     groups: Optional[List[Tuple[str, object]]] = None   # (label, Pred)
+    # Host half of the end-to-end split (exec.HostStage): PIM filters +
+    # materialization feed this plan; None = the paper's filter-only scope.
+    host: Optional[E.HostStage] = None
 
 
 def _q1() -> QuerySpec:
@@ -200,8 +208,154 @@ def _filter_only() -> List[QuerySpec]:
     return qs
 
 
+# --------------------------------------------------------------------------
+# Host stages: the join/aggregate/order half of formerly filter-only
+# queries (PIM selection + host completion, arXiv:2302.01675 §3). Column
+# values stay PIM-encoded ints end to end; decoding is presentation-only.
+# --------------------------------------------------------------------------
+def _host_q3() -> E.HostStage:
+    """Q3: shipping priority — 3-way join, revenue per order, top 10.
+    (TPC-H orders by revenue only; o_orderdate is the deterministic
+    tie-break both the executor and the oracle apply.)"""
+    j = E.HashJoin(
+        E.HashJoin(E.PimScan("customer", ("c_custkey",)),
+                   E.PimScan("orders", ("o_orderkey", "o_custkey",
+                                        "o_orderdate", "o_shippriority")),
+                   "c_custkey", "o_custkey"),
+        E.PimScan("lineitem", ("l_orderkey", "l_extendedprice",
+                               "l_discount")),
+        "o_orderkey", "l_orderkey")
+    agg = E.GroupAgg(E.Project(j, (("revenue", REVENUE),)),
+                     ("l_orderkey", "o_orderdate", "o_shippriority"),
+                     (E.HostAgg("revenue", "sum", "revenue"),))
+    root = E.OrderLimit(agg, (("revenue", True), ("o_orderdate", False),
+                              ("l_orderkey", False)), 10)
+    return E.HostStage(root, ("l_orderkey", "revenue", "o_orderdate",
+                              "o_shippriority"))
+
+
+def _host_q5() -> E.HostStage:
+    """Q5: local supplier volume — revenue per nation (customer and
+    supplier in the same ASIA nation), descending."""
+    j = E.HashJoin(
+        E.HashJoin(
+            E.HashJoin(E.PimScan("customer", ("c_custkey", "c_nationkey")),
+                       E.PimScan("orders", ("o_orderkey", "o_custkey")),
+                       "c_custkey", "o_custkey"),
+            E.PimScan("lineitem", ("l_orderkey", "l_suppkey",
+                                   "l_extendedprice", "l_discount")),
+            "o_orderkey", "l_orderkey"),
+        E.PimScan("supplier", ("s_suppkey", "s_nationkey")),
+        "l_suppkey", "s_suppkey")
+    f = E.Filter(j, Cmp("eq", Col("c_nationkey"), Col("s_nationkey")))
+    agg = E.GroupAgg(E.Project(f, (("revenue", REVENUE),)),
+                     ("s_nationkey",),
+                     (E.HostAgg("revenue", "sum", "revenue"),))
+    root = E.OrderLimit(agg, (("revenue", True), ("s_nationkey", False)),
+                        None)
+    return E.HostStage(root, ("s_nationkey", "revenue"))
+
+
+def _host_q10() -> E.HostStage:
+    """Q10: returned-item reporting — revenue per customer over 'R'
+    lineitems of one quarter's orders, top 20 (c_custkey tie-break)."""
+    j = E.HashJoin(
+        E.HashJoin(E.PimScan("customer", ("c_custkey", "c_nationkey",
+                                          "c_acctbal")),
+                   E.PimScan("orders", ("o_orderkey", "o_custkey")),
+                   "c_custkey", "o_custkey"),
+        E.PimScan("lineitem", ("l_orderkey", "l_extendedprice",
+                               "l_discount")),
+        "o_orderkey", "l_orderkey")
+    agg = E.GroupAgg(E.Project(j, (("revenue", REVENUE),)),
+                     ("c_custkey", "c_nationkey", "c_acctbal"),
+                     (E.HostAgg("revenue", "sum", "revenue"),))
+    root = E.OrderLimit(agg, (("revenue", True), ("c_custkey", False)), 20)
+    return E.HostStage(root, ("c_custkey", "revenue", "c_acctbal",
+                              "c_nationkey"))
+
+
+def _host_q12() -> E.HostStage:
+    """Q12: shipping modes and order priority — SUM(CASE) flag counts per
+    ship mode (URGENT/HIGH vs the rest)."""
+    high = InSet(Col("o_orderpriority"),
+                 (S.PRIORITIES.index("1-URGENT"), S.PRIORITIES.index("2-HIGH")))
+    j = E.HashJoin(E.PimScan("lineitem", ("l_orderkey", "l_shipmode")),
+                   E.PimScan("orders", ("o_orderkey", "o_orderpriority")),
+                   "l_orderkey", "o_orderkey")
+    proj = E.Project(j, (("high", high), ("low", Not(high))))
+    agg = E.GroupAgg(proj, ("l_shipmode",),
+                     (E.HostAgg("high_line_count", "sum", "high"),
+                      E.HostAgg("low_line_count", "sum", "low")))
+    root = E.OrderLimit(agg, (("l_shipmode", False),), None)
+    return E.HostStage(root, ("l_shipmode", "high_line_count",
+                              "low_line_count"))
+
+
+def _host_q14() -> E.HostStage:
+    """Q14: promotion effect — PROMO revenue share of one month. The two
+    exact sums come back as a single global group; the percentage is
+    decode-time (schema.decode_revenue / promo_share)."""
+    promo_lo = S.type_id(S.TYPE_SYL1.index("PROMO"), 0, 0)
+    promo_hi = S.type_id(S.TYPE_SYL1.index("PROMO"),
+                         len(S.TYPE_SYL2) - 1, len(S.TYPE_SYL3) - 1)
+    j = E.HashJoin(E.PimScan("lineitem", ("l_partkey", "l_extendedprice",
+                                          "l_discount")),
+                   E.PimScan("part", ("p_partkey", "p_type")),
+                   "l_partkey", "p_partkey")
+    proj = E.Project(j, (("revenue", REVENUE),
+                         ("is_promo", Between(Col("p_type"),
+                                              promo_lo, promo_hi)),
+                         ("promo_revenue", Mul(Col("revenue"),
+                                               Col("is_promo")))))
+    agg = E.GroupAgg(proj, (),
+                     (E.HostAgg("promo_revenue", "sum", "promo_revenue"),
+                      E.HostAgg("revenue", "sum", "revenue")))
+    return E.HostStage(agg, ("promo_revenue", "revenue"))
+
+
+def _host_q19() -> E.HostStage:
+    """Q19: discounted revenue — the PIM filters are the relation-local
+    supersets (qty 1-30, all three brand/container/size branches); the
+    host applies the residual per-branch predicate that ties each brand
+    to its exact quantity range after the join."""
+    def branch(brand, containers, size_hi, qty_lo, qty_hi):
+        return And(
+            Cmp("eq", Col("p_brand"), Lit(S.brand_name_to_id(brand))),
+            InSet(Col("p_container"),
+                  tuple(S.container_name_to_id(c) for c in containers)),
+            Between(Col("p_size"), 1, size_hi),
+            Between(Col("l_quantity"), qty_lo, qty_hi))
+
+    residual = Or(
+        branch("Brand#12", ("SM CASE", "SM BOX", "SM PACK", "SM PKG"),
+               5, 1, 11),
+        branch("Brand#23", ("MED BAG", "MED BOX", "MED PKG", "MED PACK"),
+               10, 10, 20),
+        branch("Brand#34", ("LG CASE", "LG BOX", "LG PACK", "LG PKG"),
+               15, 20, 30))
+    j = E.HashJoin(E.PimScan("lineitem", ("l_partkey", "l_quantity",
+                                          "l_extendedprice", "l_discount")),
+                   E.PimScan("part", ("p_partkey", "p_brand", "p_container",
+                                      "p_size")),
+                   "l_partkey", "p_partkey")
+    agg = E.GroupAgg(E.Project(E.Filter(j, residual),
+                               (("revenue", REVENUE),)),
+                     (), (E.HostAgg("revenue", "sum", "revenue"),))
+    return E.HostStage(agg, ("revenue",))
+
+
+_HOST_STAGES = {"Q3": _host_q3, "Q5": _host_q5, "Q10": _host_q10,
+                "Q12": _host_q12, "Q14": _host_q14, "Q19": _host_q19}
+
+
 def all_queries() -> List[QuerySpec]:
-    return [_q1(), _q6(), _q22()] + _filter_only()
+    qs = [_q1(), _q6(), _q22()] + _filter_only()
+    for q in qs:
+        build = _HOST_STAGES.get(q.name)
+        if build is not None:
+            q.host = build()
+    return qs
 
 
 def get_query(name: str) -> QuerySpec:
@@ -263,7 +417,9 @@ def eval_aggregate(cols: Dict[str, np.ndarray], mask: np.ndarray, agg: Agg):
     if agg.op == "sum":
         return int(vals.sum())
     if agg.op == "avg":
-        return (int(vals.sum()), int(mask.sum()))
+        # Empty-group avg is None (matches _finalize_aggs), not (0, 0).
+        n = int(mask.sum())
+        return None if n == 0 else (int(vals.sum()), n)
     if agg.op == "min":
         return int(vals.min()) if vals.size else None
     if agg.op == "max":

@@ -153,3 +153,77 @@ SCHEMA: Dict[str, Relation] = {
 # Money offsets: acctbal in [-999.99, 9999.99] -> store cents + 100_000 so
 # bit-sliced values are non-negative (leading-zero suppression needs that).
 ACCTBAL_OFFSET = 100_000
+
+
+# --------------------------------------------------------------------------
+# Value decoding (PIM encoding -> presentation values)
+# --------------------------------------------------------------------------
+# The inverse of the offline encoding above, used when end-to-end query
+# results leave the engine: scaled cents -> currency, day offsets -> ISO
+# dates, dictionary ids -> strings. Encoded (integer) values stay the
+# exact comparison/aggregation domain; decoding is presentation only.
+
+def days_to_date(days: int) -> str:
+    return (EPOCH + _dt.timedelta(days=int(days))).isoformat()
+
+
+def type_id_to_name(tid: int) -> str:
+    s12, s3 = divmod(int(tid), len(TYPE_SYL3))
+    s1, s2 = divmod(s12, len(TYPE_SYL2))
+    return f"{TYPE_SYL1[s1]} {TYPE_SYL2[s2]} {TYPE_SYL3[s3]}"
+
+
+def container_id_to_name(cid: int) -> str:
+    c1, c2 = divmod(int(cid), len(CONTAINER_SYL2))
+    return f"{CONTAINER_SYL1[c1]} {CONTAINER_SYL2[c2]}"
+
+
+def brand_id_to_name(bid: int) -> str:
+    m, n = divmod(int(bid), 5)
+    return f"Brand#{(m + 1) * 10 + (n + 1)}"
+
+
+DICT_VOCABS = {
+    "l_returnflag": RETURNFLAGS, "l_linestatus": LINESTATUS,
+    "l_shipmode": SHIPMODES, "l_shipinstruct": SHIPINSTRUCT,
+    "o_orderstatus": ORDERSTATUS, "o_orderpriority": PRIORITIES,
+    "c_mktsegment": SEGMENTS,
+}
+_DATE_ATTRS = {"l_shipdate", "l_commitdate", "l_receiptdate", "o_orderdate"}
+_CENTS_ATTRS = {"l_extendedprice", "o_totalprice", "p_retailprice",
+                "ps_supplycost"}
+_OFFSET_CENTS_ATTRS = {"c_acctbal", "s_acctbal"}
+_NATION_ATTRS = {"c_nationkey", "s_nationkey", "n_nationkey"}
+
+
+def decode_value(attr: str, v: int):
+    """Decode one PIM-encoded attribute value for presentation.
+
+    De-scales cents (incl. the acctbal offset), maps day offsets to ISO
+    dates, and reverses every dictionary encoding; unencoded integers
+    pass through. Derived ``revenue``-style columns are money at
+    cents x percent scale and decode via :func:`decode_revenue`.
+    """
+    v = int(v)
+    if attr in _CENTS_ATTRS:
+        return v / 100.0
+    if attr in _OFFSET_CENTS_ATTRS:
+        return (v - ACCTBAL_OFFSET) / 100.0
+    if attr in _DATE_ATTRS:
+        return days_to_date(v)
+    if attr in DICT_VOCABS:
+        return DICT_VOCABS[attr][v]
+    if attr in _NATION_ATTRS:
+        return NATIONS[v][0]
+    if attr == "p_brand":
+        return brand_id_to_name(v)
+    if attr == "p_type":
+        return type_id_to_name(v)
+    if attr == "p_container":
+        return container_id_to_name(v)
+    return v
+
+
+def decode_revenue(v: int) -> float:
+    """cents x percent (extendedprice * (100 - discount)) -> currency."""
+    return int(v) / 10_000.0

@@ -78,8 +78,11 @@ def _program_kernel(stacked_ref, masks_ref, pc_ref, mm_ref, *, instrs,
     mm_at = {mj.exec_at: mj for mj in mm_jobs}
 
     for i, ins in enumerate(instrs):
-        if ins.kind == "ReduceSum":
-            pass                                 # runs at its job's exec_at
+        if ins.kind in ("ReduceSum", "Materialize"):
+            # ReduceSum runs at its grouped job's exec_at; Materialize is
+            # lowered as a second kernel over the attr planes (its mask
+            # rides the mask_outputs block) — see kernels.materialize.
+            pass
         elif ins.kind == "ReduceMinMax":
             mj = mm_at[i]
             bits, found = _reduce_minmax_bits(

@@ -1,14 +1,10 @@
 """Fault tolerance: checkpoint atomicity, resume-exactness, data-pipeline
 determinism, optimizer behaviour."""
 import dataclasses
-import json
-import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_smoke_config

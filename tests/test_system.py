@@ -1,7 +1,5 @@
 """End-to-end behaviour: the paper's system (bit-sliced analytics) plus
 framework glue — quick integration checks."""
-import numpy as np
-
 from repro.db import database, queries, tpch
 
 
