@@ -7,9 +7,12 @@ hardware. Also times the fused filter+aggregate path vs the paper-faithful
 two-phase (filter, then masked reduce) execution, the whole-program fused
 executor vs the eager engine (TPC-H Q6), the grouped-aggregation
 executor on TPC-H Q1 (per-pass aggregate-plane reads: grouped popcounts
-vs one read per ReduceSum), and the end-to-end query subsystem on TPC-H
-Q3/Q14 (PIM filter + materialize dispatch vs host join/agg/order wall
-split, with the materialized-row count as a gated counter).
+vs one read per ReduceSum), the carry-save arithmetic lowering on Q1's
+``charge`` expression (``q1_arith``: derived-plane op depth, CSA tree vs
+ripple-carry, next to its cold compile wall), and the end-to-end query
+subsystem on TPC-H Q3/Q14 (PIM filter + materialize dispatch vs host
+join/agg/order wall split, with the materialized-row count as a gated
+counter).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -161,6 +164,7 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
                  peak_live_planes=cp.peak_live_planes,
                  total_reg_planes=cp.total_reg_planes)]
     rows.extend(bench_q1_grouped(db))
+    rows.extend(bench_q1_arith(db))
     rows.extend(bench_e2e(db))
     rows.extend(bench_distributed_program(db, spec))
     return rows
@@ -234,6 +238,58 @@ def bench_q1_grouped(db) -> List[dict]:
                      cp.agg_plane_reads_ungrouped / cp.agg_plane_reads, 2),
                  dispatches=cp.n_dispatches,
                  exact=fused.aggregates == base.aggregates)]
+
+
+def bench_q1_arith(db) -> List[dict]:
+    """Q1's arithmetic hot spot in isolation: the ``charge`` expression
+    ``l_extendedprice * (100 - l_discount) * (l_tax + 100)`` compiled as
+    its own fused program, so its cold (XLA compile) wall tracks the
+    derived-arith lowering alone. The depth counters are the lowering's
+    serialized plane-op chains: carry-save (3:2 compressor trees + one
+    batched carry-propagate per arith batch) vs the ripple-carry
+    formulation (one full carry chain per extra addend) — the compile
+    latency is roughly proportional to this unrolled depth."""
+    from repro.core import cost_model, isa
+    from repro.core import engine as eng_mod
+    from repro.core import program as prog
+    from repro.db import compiler as C
+
+    rel = db.relations["lineitem"]
+    comp = C.Compiler(rel)
+    charge = C.Mul(C.Mul(C.Col("l_extendedprice"),
+                         C.RSubImm(100, C.Col("l_discount"))),
+                   C.AddE(C.Col("l_tax"), C.Lit(100)))
+    reg, w = comp.compile_expr(charge)
+    comp.program.append(isa.ReduceSum(dest="s", attr=reg, mask="__valid__",
+                                      n_bits=w))
+    cp = prog.compile_program(rel, comp.program)
+
+    def once():
+        return prog.run_program(cp, rel).scalar("s")
+
+    cold, warm = _time(once, reps=3)
+    e = eng_mod.Engine(rel)
+    e.run(comp.program)
+    lowering = cost_model.classify_lowering(cp.arith.steps)
+    return [_row(
+        "q1_arith", warm, cold,
+        arith_depth_csa=cp.arith_depth_csa,
+        arith_depth_ripple=cp.arith_depth_ripple,
+        depth_reduction=round(cp.arith_depth_ripple /
+                              max(1, cp.arith_depth_csa), 2),
+        arith_batches=cp.n_arith_batches,
+        csa_compressions=lowering.csa_compressions,
+        carry_propagate_bits=lowering.carry_propagate_bits,
+        # The lowering must stay invisible to the Table 4 accounting:
+        # classify_program walks the eager ISA trace and RAISES on any
+        # non-ISA kind, so a lowering-internal instruction leaking into
+        # the trace (or a lowering kind growing a cycle charge) breaks
+        # this row rather than silently shifting cycles.
+        paper_cycles=cp.paper_cycles(),
+        exact=(once() == int(e.read_scalar("s"))
+               and cost_model.classify_program(e.trace).cycles_total
+               == cp.paper_cycles()
+               and lowering.paper_cycles == 0))]
 
 
 def bench_distributed_program(db, spec) -> List[dict]:

@@ -3,9 +3,11 @@
 Compares a fresh ``bench_kernels.py --json`` run against the checked-in
 ``benchmarks/baseline.json`` and fails (exit 1) when a gated metric
 regresses by more than ``--max-ratio`` (default 1.5x): warm Q1/Q6 fused
-wall time, dispatch counts, and the grouped executor's per-pass
-aggregate-plane-read counter. It also prints the cold (XLA compile)
-latency of every row next to its baseline, so the compile-time trend the
+wall time, dispatch counts, the grouped executor's per-pass
+aggregate-plane-read counter, the arithmetic lowering's serialized
+plane-op depth, and — promoted from tabulated to gated since the
+carry-save arithmetic PR — per-query cold XLA compile latency. The full
+per-row compile-latency table still prints every run, so the trend the
 ROADMAP tracks has a visible trajectory in every CI log.
 
 Refreshing the baseline: run ``python benchmarks/bench_kernels.py --json
@@ -21,8 +23,10 @@ import json
 import sys
 
 # (row name, field path, kind). "time" fields are wall-clock (noisy, gated
-# at max-ratio); "count" fields are deterministic model counters (gated at
-# the same ratio per the gate spec, but any growth is suspicious).
+# at max-ratio); "compile" fields are cold first-call latency (wall-clock
+# too — dominated by XLA compile, so a >1.5x jump means the lowering got
+# deeper); "count" fields are deterministic model counters (gated at the
+# same ratio per the gate spec, but any growth is suspicious).
 GATES = [
     ("q6_program_fused_vs_eager", "warm_us", "time"),
     ("q1_grouped", "warm_us", "time"),
@@ -36,6 +40,15 @@ GATES = [
     ("q14_e2e", "warm_us", "time"),
     ("q3_e2e", "meta.materialized_rows", "count"),
     ("q14_e2e", "meta.materialized_rows", "count"),
+    # Carry-save arithmetic pipeline: the lowering's serialized plane-op
+    # depth is deterministic; cold walls catch compile-latency regressions.
+    ("q1_arith", "warm_us", "time"),
+    ("q1_arith", "meta.arith_depth_csa", "count"),
+    ("q1_arith", "cold_us", "compile"),
+    ("q1_grouped", "cold_us", "compile"),
+    ("q6_program_fused_vs_eager", "cold_us", "compile"),
+    ("q3_e2e", "cold_us", "compile"),
+    ("q14_e2e", "cold_us", "compile"),
 ]
 
 
@@ -67,14 +80,15 @@ def compare(baseline: dict, current: dict, max_ratio: float) -> int:
         ratio = f"{c / b:.2f}x" if b and c else "-"
         print(f"{name:40s} {_fmt_us(b):>10s} {_fmt_us(c):>10s} {ratio:>7s}")
 
-    # Deterministic counters gate against any baseline; wall-time gates
-    # only bind when the baseline itself was measured in CI (same runner
-    # class) — a dev-machine baseline would fail every run on timing
-    # alone. Commit a green run's BENCH_<sha>.json artifact to arm them.
+    # Deterministic counters gate against any baseline; wall-time gates —
+    # warm AND cold/compile, both machine-dependent — only bind when the
+    # baseline itself was measured in CI (same runner class): a
+    # dev-machine baseline would fail every run on timing alone. Commit a
+    # green run's BENCH_<sha>.json artifact to arm them.
     ci_baseline = bool(baseline.get("ci"))
     print(f"\n== Gated metrics (fail above {max_ratio:.2f}x of baseline) ==")
     if not ci_baseline:
-        print("  (baseline not CI-sourced: time gates report-only,"
+        print("  (baseline not CI-sourced: time/compile gates report-only,"
               " counts still gate)")
     failures = []
     for name, path, kind in GATES:
@@ -87,7 +101,7 @@ def compare(baseline: dict, current: dict, max_ratio: float) -> int:
             print(f"  {name}.{path}: no baseline (={c}), skipping")
             continue
         ok = (not c) if not b else c <= b * max_ratio
-        enforced = kind != "time" or ci_baseline
+        enforced = kind == "count" or ci_baseline
         verdict = "OK" if ok else ("FAIL" if enforced else "WARN")
         print(f"  [{verdict}] {name}.{path} ({kind}): baseline={b} current={c}")
         if not ok and enforced:

@@ -1,3 +1,8 @@
 """PIMDB core: bit-sliced bulk-bitwise analytics engine (paper's contribution)."""
-from . import bitslice, cost_model, engine, isa  # noqa: F401
+from . import bitslice, compile_cache, cost_model, engine, isa  # noqa: F401
 from .engine import Engine, PimRelation  # noqa: F401
+
+# Local-dev persistent XLA compilation cache: no-op unless the operator
+# sets REPRO_JAX_CACHE_DIR (the CI bench job never does, so cold timings
+# stay honest).
+compile_cache.maybe_enable_persistent_cache()

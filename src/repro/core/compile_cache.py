@@ -1,0 +1,45 @@
+"""Opt-in persistent XLA compilation cache for local development.
+
+Q1-class programs cost seconds of XLA compile per process even after the
+carry-save lowering; a persistent on-disk cache makes every process after
+the first start warm. Set ``REPRO_JAX_CACHE_DIR`` to any writable
+directory and import ``repro.core`` (every entry point does) — nothing
+happens when the variable is unset, so the CI ``bench`` job, which
+deliberately runs cold to keep ``cold_us`` honest, simply doesn't set it.
+
+Typical local setup::
+
+    export REPRO_JAX_CACHE_DIR=~/.cache/repro-xla
+
+The tier-1 test CI job restores ``JAX_COMPILATION_CACHE_DIR`` via
+actions/cache instead (jax reads that variable natively); this helper is
+the same mechanism with repo-scoped spelling plus directory creation and
+a zero min-compile-time threshold so even small programs persist.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+ENV_VAR = "REPRO_JAX_CACHE_DIR"
+
+
+def maybe_enable_persistent_cache(path: Optional[str] = None) -> Optional[str]:
+    """Point jax's persistent compilation cache at ``path`` (default: the
+    ``REPRO_JAX_CACHE_DIR`` env var). Returns the activated directory, or
+    None when disabled. Safe to call repeatedly and before any jit."""
+    path = path if path is not None else os.environ.get(ENV_VAR)
+    if not path:
+        return None
+    import jax
+
+    path = os.path.abspath(os.path.expanduser(path))
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    try:
+        # Persist everything, not just >1s compiles (the default threshold
+        # would skip most per-query programs at bench scale factors).
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except AttributeError:                      # older jax: flag absent
+        pass
+    return path

@@ -12,13 +12,21 @@ Two execution paths produce identical results:
 * ``backend="pallas"`` — Pallas kernels from ``repro.kernels`` for the
   hot loops (bit-serial predicate, fused filter+aggregate).
 
+Arithmetic comes in two semantically identical lowerings: the ripple-carry
+shift-add forms (``add_planes``/``mul_planes``/... — what this eager
+engine executes, and the oracle the fused paths are tested against) and
+the carry-save forms (``csa_compress3``/``csa_reduce``/``*_csa`` — a
+log-depth 3:2 compressor tree over ALL addends followed by ONE final
+carry-propagate pass), which the fused program executor uses to keep the
+unrolled XLA/Mosaic graphs shallow.
+
 Every executed instruction is appended to ``self.trace`` so the cost model
 can charge paper-faithful cycles/energy/endurance afterwards.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -96,11 +104,16 @@ def cmp_planes(pa: jnp.ndarray, pb: jnp.ndarray):
     return lt, eq
 
 
-def add_planes(pa: jnp.ndarray, pb: jnp.ndarray, out_bits: int) -> jnp.ndarray:
-    """Ripple-carry bit-serial addition over planes -> (out_bits, W)."""
+def add_planes(pa: jnp.ndarray, pb: jnp.ndarray, out_bits: int,
+               carry_in: int = 0) -> jnp.ndarray:
+    """Ripple-carry bit-serial addition over planes -> (out_bits, W).
+
+    ``carry_in`` seeds the carry chain (0 or 1): two's-complement subtract
+    folds its ``+1`` here instead of paying a second ripple pass.
+    """
     w = pa.shape[1:]
     zero = jnp.zeros(w, U32)
-    carry = zero
+    carry = jnp.full(w, _FULL, U32) if carry_in else zero
     outs = []
     for b in range(out_bits):
         a = pa[b] if b < pa.shape[0] else zero
@@ -129,40 +142,180 @@ def add_imm_planes(pa: jnp.ndarray, imm: int, out_bits: int) -> jnp.ndarray:
     return jnp.stack(outs)
 
 
-def mul_imm_planes(pa: jnp.ndarray, imm: int, out_bits: int) -> jnp.ndarray:
-    """Shift-add multiply by an immediate (only set bits cost adds)."""
-    w = pa.shape[1:]
-    acc = jnp.zeros((out_bits,) + tuple(w), U32)
-    b = 0
-    while (imm >> b) and b < out_bits:
-        if (imm >> b) & 1:
-            shifted = jnp.concatenate(
-                [jnp.zeros((b,) + tuple(w), U32), pa[: max(0, out_bits - b)]], axis=0
-            )[:out_bits]
-            acc = add_planes(acc, shifted, out_bits)
-        b += 1
+def extend_planes(p: jnp.ndarray, out_bits: int) -> jnp.ndarray:
+    """Zero-extend (or truncate) a plane stack to exactly ``out_bits``."""
+    if p.shape[0] == out_bits:
+        return p
+    if p.shape[0] > out_bits:
+        return p[:out_bits]
+    pad = jnp.zeros((out_bits - p.shape[0],) + tuple(p.shape[1:]), U32)
+    return jnp.concatenate([p, pad], axis=0)
+
+
+def shift_planes(pa: jnp.ndarray, b: int, out_bits: int) -> jnp.ndarray:
+    """(pa << b) truncated to ``out_bits`` planes (a multiply partial
+    product before gating)."""
+    w = tuple(pa.shape[1:])
+    return jnp.concatenate(
+        [jnp.zeros((b,) + w, U32), pa[: max(0, out_bits - b)]], axis=0
+    )[:out_bits]
+
+
+def imm_planes(imm: int, n_bits: int, shape) -> jnp.ndarray:
+    """An immediate as a constant plane stack (all-ones / all-zeros per
+    bit). Only used inside batched CSA reductions — XLA folds the
+    constants, so the immediate still never occupies real planes."""
+    rows = [jnp.full(shape, _FULL, U32) if (imm >> b) & 1
+            else jnp.zeros(shape, U32) for b in range(n_bits)]
+    return jnp.stack(rows)
+
+
+def mul_partial_products(pa: jnp.ndarray, pb: Optional[jnp.ndarray],
+                         imm: Optional[int], out_bits: int
+                         ) -> List[jnp.ndarray]:
+    """The shift-add partial products of a multiply, ungated-by-accumulate:
+    immediate multiplies contribute one shifted copy of ``pa`` per set imm
+    bit; attribute multiplies gate ``pa << b`` with plane ``pb[b]``."""
+    pps: List[jnp.ndarray] = []
+    if imm is not None:
+        b = 0
+        while (imm >> b) and b < out_bits:
+            if (imm >> b) & 1:
+                pps.append(shift_planes(pa, b, out_bits))
+            b += 1
+    else:
+        for b in range(min(pb.shape[0], out_bits)):
+            pps.append(shift_planes(pa, b, out_bits) & pb[b][None])
+    return pps
+
+
+# --------------------------------------------------------------------------
+# Carry-save (3:2 compressor) arithmetic — Wallace-style reduction
+# --------------------------------------------------------------------------
+def csa_compress3(a: jnp.ndarray, b: jnp.ndarray,
+                  c: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One 3:2 compressor level over equal-shape plane stacks.
+
+    Returns ``(sum, carry)`` with the carry stack already shifted up one
+    bit plane (the carry out of bit b feeds bit b+1; the top carry drops,
+    i.e. arithmetic is mod 2^n like every planes op here). Constant depth
+    regardless of width — this is what makes the multiply tree shallow.
+    """
+    s = a ^ b ^ c
+    maj = (a & b) | (c & (a ^ b))
+    carry = jnp.concatenate([jnp.zeros_like(maj[:1]), maj[:-1]], axis=0)
+    return s, carry
+
+
+def csa_tree_levels(k: int) -> int:
+    """3:2 compressor levels needed to reduce ``k`` addends to 2.
+
+    Mirrors ``csa_reduce``'s loop exactly (full triples compress 3 -> 2,
+    the 0-2 leftover terms pass through) so the CI-gated depth counter
+    tracks the real lowering; change the two together.
+    """
+    levels = 0
+    while k > 2:
+        k = 2 * (k // 3) + k % 3
+        levels += 1
+    return levels
+
+
+def csa_reduce(terms: Sequence[jnp.ndarray], out_bits: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduce any number of addend plane stacks to a (sum, carry) pair via
+    a log-depth 3:2 compressor tree. The caller finishes with ONE
+    carry-propagate pass (``add_planes``), however many addends went in —
+    vs one ripple pass *per addend* in the shift-add formulation."""
+    work = [extend_planes(t, out_bits) for t in terms]
+    if not work:
+        raise ValueError("csa_reduce needs at least one term")
+    while len(work) > 2:
+        nxt: List[jnp.ndarray] = []
+        tail = len(work) % 3
+        for i in range(0, len(work) - tail, 3):
+            s, c = csa_compress3(work[i], work[i + 1], work[i + 2])
+            nxt.append(s)
+            nxt.append(c)
+        nxt.extend(work[len(work) - tail:])
+        work = nxt
+    if len(work) == 1:
+        work.append(jnp.zeros_like(work[0]))
+    return work[0], work[1]
+
+
+def add_planes_csa(terms: Sequence[jnp.ndarray], out_bits: int,
+                   carry_in: int = 0) -> jnp.ndarray:
+    """Sum any number of plane stacks: CSA tree + one final ripple pass."""
+    if not terms:
+        raise ValueError("add_planes_csa needs at least one term")
+    if len(terms) == 1 and not carry_in:
+        return extend_planes(terms[0], out_bits)
+    s, c = csa_reduce(terms, out_bits)
+    return add_planes(s, c, out_bits, carry_in=carry_in)
+
+
+def _ripple_accumulate(pps: Sequence[jnp.ndarray], out_bits: int,
+                       shape) -> jnp.ndarray:
+    """Shift-add accumulation: one full ripple pass per extra partial
+    product. The first seeds the accumulator directly (copy-through)
+    instead of paying an adder pass against zeros."""
+    acc: Optional[jnp.ndarray] = None
+    for pp in pps:
+        acc = (extend_planes(pp, out_bits) if acc is None
+               else add_planes(acc, pp, out_bits))
+    if acc is None:
+        return jnp.zeros((out_bits,) + tuple(shape), U32)
     return acc
+
+
+def mul_imm_planes(pa: jnp.ndarray, imm: int, out_bits: int) -> jnp.ndarray:
+    """Shift-add multiply by an immediate (only set bits cost adds).
+
+    Ripple-carry oracle over the SAME ``mul_partial_products`` enumeration
+    the CSA path reduces — only the accumulation strategy differs, so
+    oracle-vs-CSA parity tests compare exactly that.
+    """
+    return _ripple_accumulate(mul_partial_products(pa, None, imm, out_bits),
+                              out_bits, pa.shape[1:])
 
 
 def mul_planes(pa: jnp.ndarray, pb: jnp.ndarray, out_bits: int) -> jnp.ndarray:
-    """Bit-serial shift-add multiply: partial product b = (pa << b) AND pb[b]."""
-    w = pa.shape[1:]
-    acc = jnp.zeros((out_bits,) + tuple(w), U32)
-    for b in range(min(pb.shape[0], out_bits)):
-        gate = pb[b]
-        shifted = jnp.concatenate(
-            [jnp.zeros((b,) + tuple(w), U32), pa[: max(0, out_bits - b)]], axis=0
-        )[:out_bits]
-        acc = add_planes(acc, shifted & gate[None], out_bits)
-    return acc
+    """Bit-serial shift-add multiply: partial product b = (pa << b) AND
+    pb[b]. Ripple-carry oracle; see ``mul_imm_planes``."""
+    return _ripple_accumulate(mul_partial_products(pa, pb, None, out_bits),
+                              out_bits, pa.shape[1:])
+
+
+def mul_imm_planes_csa(pa: jnp.ndarray, imm: int, out_bits: int) -> jnp.ndarray:
+    """Immediate multiply, carry-save: ALL partial products reduced in a
+    log-depth 3:2 tree, then one carry-propagate pass (vs one ripple pass
+    per set immediate bit in the oracle)."""
+    pps = mul_partial_products(pa, None, imm, out_bits)
+    if not pps:
+        return jnp.zeros((out_bits,) + tuple(pa.shape[1:]), U32)
+    return add_planes_csa(pps, out_bits)
+
+
+def mul_planes_csa(pa: jnp.ndarray, pb: jnp.ndarray,
+                   out_bits: int) -> jnp.ndarray:
+    """Attribute multiply, carry-save (see ``mul_imm_planes_csa``)."""
+    pps = mul_partial_products(pa, pb, None, out_bits)
+    if not pps:
+        return jnp.zeros((out_bits,) + tuple(pa.shape[1:]), U32)
+    return add_planes_csa(pps, out_bits)
 
 
 def sub_planes(pa: jnp.ndarray, pb: jnp.ndarray, out_bits: int) -> jnp.ndarray:
-    """a - b (two's complement), assuming a >= b for unsigned semantics."""
+    """a - b (two's complement), assuming a >= b for unsigned semantics.
+
+    The ``+1`` of the complement rides the adder's carry-in — one ripple
+    pass total, not an add followed by a full increment pass.
+    """
     w = pa.shape[1:]
     zero = jnp.zeros(w, U32)
     nb = jnp.stack([~(pb[b] if b < pb.shape[0] else zero) for b in range(out_bits)])
-    return add_imm_planes(add_planes(pa, nb, out_bits), 1, out_bits)
+    return add_planes(pa, nb, out_bits, carry_in=1)
 
 
 # --------------------------------------------------------------------------

@@ -266,10 +266,10 @@ class BitwiseEvaluator:
                 instr.n_bits)
         elif kind == "Multiply":
             if instr.imm is not None:
-                self.derived[instr.dest] = eng.mul_imm_planes(
+                self.derived[instr.dest] = eng.mul_imm_planes_csa(
                     self.planes(instr.attr_a), instr.imm, instr.n_bits)
             else:
-                self.derived[instr.dest] = eng.mul_planes(
+                self.derived[instr.dest] = eng.mul_planes_csa(
                     self.planes(instr.attr_a), self.planes(instr.attr_b),
                     instr.n_bits)
         elif kind == "ColumnTransform":
@@ -277,6 +277,72 @@ class BitwiseEvaluator:
         else:
             raise ValueError(f"non-bitwise instruction {kind} "
                              "must be handled by the caller")
+
+    # -- carry-save arithmetic batching ------------------------------------
+    def _arith_terms(self, instr: isa.PimInstruction):
+        """Decompose one derived-arith instruction into its carry-save
+        addend list: ``(terms, carry_in, out_bits)``. Immediates become
+        constant plane stacks (XLA folds them); subtract contributes the
+        inverted operand with the ``+1`` as the final pass's carry-in."""
+        kind = instr.kind
+        w = instr.n_bits
+        if kind == "AddImm":
+            return ([self.planes(instr.attr),
+                     eng.imm_planes(instr.imm, w, self._shape)], 0, w)
+        if kind == "Add":
+            return ([self.planes(instr.attr_a), self.planes(instr.attr_b)],
+                    0, w)
+        if kind == "Subtract":
+            nb = ~eng.extend_planes(self.planes(instr.attr_b), w)
+            return ([self.planes(instr.attr_a), nb], 1, w)
+        if kind == "Multiply":
+            pa = self.planes(instr.attr_a)
+            if instr.imm is not None:
+                pps = eng.mul_partial_products(pa, None, instr.imm, w)
+            else:
+                pps = eng.mul_partial_products(pa, self.planes(instr.attr_b),
+                                               None, w)
+            return (pps, 0, w)
+        raise ValueError(f"not a derived-arith instruction: {kind}")
+
+    def execute_arith_batch(self, batch: Sequence[isa.PimInstruction]) -> None:
+        """Evaluate independent derived-arith instructions together: each
+        member's addends CSA-reduce to a (sum, carry) pair, then ONE
+        batched ripple pass carry-propagates all members at once — N
+        independent Multiply/Add chains cost one final pass, not N."""
+        finals = []                      # (instr, sum, carry, carry_in)
+        for ins in batch:
+            terms, cin, w = self._arith_terms(ins)
+            if not terms:
+                self.derived[ins.dest] = jnp.zeros((w,) + self._shape, U32)
+            elif len(terms) == 1 and not cin:
+                self.derived[ins.dest] = eng.extend_planes(terms[0], w)
+            else:
+                s, c = eng.csa_reduce(terms, w)
+                finals.append((ins, s, c, cin))
+        if not finals:
+            return
+        if len(finals) == 1:
+            ins, s, c, cin = finals[0]
+            self.derived[ins.dest] = eng.add_planes(s, c, ins.n_bits,
+                                                    carry_in=cin)
+            return
+        wmax = max(ins.n_bits for ins, _, _, _ in finals)
+        s_st = jnp.stack([eng.extend_planes(s, wmax) for _, s, _, _ in finals])
+        c_st = jnp.stack([eng.extend_planes(c, wmax) for _, _, c, _ in finals])
+        # Scalar-broadcast planes (not a captured constant vector): the
+        # Pallas kernel traces this too, where non-scalar consts are
+        # disallowed.
+        carry = jnp.stack([jnp.full(self._shape, _FULL, U32) if f[3]
+                           else jnp.zeros(self._shape, U32) for f in finals])
+        outs = []
+        for b in range(wmax):
+            a, d = s_st[:, b], c_st[:, b]
+            outs.append(a ^ d ^ carry)
+            carry = (a & d) | (carry & (a ^ d))
+        res = jnp.stack(outs, axis=1)            # (batch, wmax, W)
+        for m, (ins, _, _, _) in enumerate(finals):
+            self.derived[ins.dest] = res[m, :ins.n_bits]
 
 
 def _reduce_minmax_bits(planes: jnp.ndarray, mask: jnp.ndarray,
@@ -430,6 +496,132 @@ def plan_reduces(instrs: Sequence[isa.PimInstruction],
                       col, mm_col, plane_reads, ungrouped)
 
 
+# --------------------------------------------------------------------------
+# Arithmetic planning: carry-save lowering + plane-group batching
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ArithPlan:
+    """How the derived-arith instructions lower to carry-save trees.
+
+    ``batches`` are runs of *consecutive, mutually independent* derived
+    instructions (no member reads another member's dest): all members of a
+    batch CSA-reduce their addends independently, then share ONE batched
+    final carry-propagate pass at the first member's position. Depth
+    counters measure serialized plane-op chains (a carry-propagate ripple
+    step is depth 1 per bit; a 3:2 compressor level is depth 1 regardless
+    of width) — the compile-latency proxy the bench trend records.
+    ``steps`` counts the lowering-internal op kinds for
+    ``cost_model.classify_lowering``; these are lowering facts only and
+    never contribute to Table 4 ISA cycles.
+    """
+    batches: Tuple[Tuple[int, ...], ...]   # instruction-index runs, len >= 2
+    depth_csa: int                         # serialized depth, CSA + batching
+    depth_ripple: int                      # same program, ripple lowering
+    steps: Tuple[Tuple[str, int], ...]     # internal kind -> count
+
+    @property
+    def batched_indices(self) -> FrozenSet[int]:
+        return frozenset(i for b in self.batches for i in b)
+
+
+def _arith_addend_count(ins: isa.PimInstruction,
+                        op_width: Callable[[str], int]) -> int:
+    """Number of carry-save addends an instruction contributes."""
+    if ins.kind == "Multiply":
+        w = ins.n_bits
+        if ins.imm is not None:
+            return sum(1 for b in range(w) if (ins.imm >> b) & 1)
+        return min(op_width(ins.attr_b), w)
+    return 2                                     # a + b / a + imm / a + ~b
+
+
+def plan_arith(instrs: Sequence[isa.PimInstruction],
+               analysis: ProgramAnalysis,
+               widths: Mapping[str, int]) -> ArithPlan:
+    """Plan the carry-save lowering of every derived-arith instruction.
+
+    A batch executes at its *first* member's position; a later derived
+    instruction may join an open batch when every operand it reads was
+    produced before that position (source attributes always qualify), so
+    deferred ReduceSums or mask logic between two independent Multiplys do
+    not break the batch. Early execution is sound under single-assignment
+    (like ``plan_reduces``' deferral — batching is disabled otherwise):
+    a member's result simply becomes live earlier, and its consumers all
+    sit at or after its original position.
+    """
+    producer: Dict[str, int] = {}
+    ssa = True
+    for i, ins in enumerate(instrs):
+        if ins.dest in producer:
+            ssa = False
+        producer[ins.dest] = i
+
+    def op_width(name: str) -> int:
+        if analysis.reg_kind.get(name) == "mask":
+            return 1
+        return analysis.widths.get(name, widths.get(name, 1))
+
+    # -- open-batch scan ----------------------------------------------------
+    batches: List[Tuple[int, ...]] = []
+    if ssa:
+        open_start: Optional[int] = None
+        members: List[int] = []
+        for i, ins in enumerate(instrs):
+            if ins.kind not in _DERIVED_KINDS:
+                continue
+            joins = open_start is not None and all(
+                producer.get(r, -1) < open_start
+                for r in instruction_reads(ins))
+            if joins:
+                members.append(i)
+            else:
+                if len(members) > 1:
+                    batches.append(tuple(members))
+                open_start, members = i, [i]
+        if len(members) > 1:
+            batches.append(tuple(members))
+
+    # -- depth + internal-step accounting ----------------------------------
+    in_batch = {i for b in batches for i in b}
+    depth_csa = 0
+    depth_ripple = 0
+    csa_compressions = 0
+    carry_propagate_bits = 0
+    copy_throughs = 0
+
+    def member_stats(ins: isa.PimInstruction) -> Tuple[int, int]:
+        """(csa tree levels, addend count) of one instruction."""
+        k = _arith_addend_count(ins, op_width)
+        return eng.csa_tree_levels(k), k
+
+    for i, ins in enumerate(instrs):
+        if ins.kind not in _DERIVED_KINDS:
+            continue
+        levels, k = member_stats(ins)
+        w = ins.n_bits
+        # Ripple lowering of the same instruction (post copy-through fix):
+        # one carry chain per extra addend; subtract's +1 rides carry-in.
+        depth_ripple += max(0, k - 1) * w
+        csa_compressions += max(0, k - 2)
+        if k <= 1:
+            copy_throughs += 1
+            continue
+        if i not in in_batch:
+            depth_csa += levels + w
+            carry_propagate_bits += w
+    for b in batches:
+        stats = [member_stats(instrs[i]) for i in b]
+        live = [(lv, instrs[i].n_bits) for (lv, k), i in zip(stats, b)
+                if k > 1]
+        if live:
+            depth_csa += max(lv for lv, _ in live) + max(w for _, w in live)
+            carry_propagate_bits += max(w for _, w in live)
+    steps = (("csa_compress", csa_compressions),
+             ("carry_propagate", carry_propagate_bits),
+             ("copy_through", copy_throughs))
+    return ArithPlan(tuple(batches), depth_csa, depth_ripple, steps)
+
+
 def frees_by_instr(n_instrs: int, last_use: Mapping[str, int],
                    keep: FrozenSet[str]) -> Tuple[Tuple[str, ...], ...]:
     """frees[i] = registers whose (plan-extended) last use is instruction
@@ -525,6 +717,7 @@ class CompiledProgram:
     scalar_kinds: Dict[str, tuple]         # dest -> ("sum",)|("minmax",)
     analysis: ProgramAnalysis
     plan: ReducePlan
+    arith: ArithPlan
     backend: str
     n_words: int
     _fn: Callable                          # (planes dict, valid) -> raw out
@@ -553,6 +746,22 @@ class CompiledProgram:
     @property
     def n_reduce_jobs(self) -> int:
         return len(self.plan.sum_jobs) + len(self.plan.mm_jobs)
+
+    @property
+    def arith_depth_csa(self) -> int:
+        """Serialized derived-plane op depth under the carry-save lowering
+        (3:2 tree levels + one shared carry-propagate per arith batch)."""
+        return self.arith.depth_csa
+
+    @property
+    def arith_depth_ripple(self) -> int:
+        """Same program's depth under the ripple-carry lowering (one full
+        carry chain per extra addend) — the pre-CSA execution."""
+        return self.arith.depth_ripple
+
+    @property
+    def n_arith_batches(self) -> int:
+        return len(self.arith.batches)
 
     @property
     def n_shards(self) -> int:
@@ -676,6 +885,7 @@ def compile_program(relation: eng.PimRelation,
     analysis = analyze_program(instrs, relation, keep=keep)
     widths = {a: relation.width_of(a) for a in analysis.source_attrs}
     plan = plan_reduces(instrs, analysis, widths)
+    arith = plan_arith(instrs, analysis, widths)
 
     if mesh is not None:
         from . import distributed as dist  # lazy: avoids import cycle
@@ -688,9 +898,9 @@ def compile_program(relation: eng.PimRelation,
     if fn is None:
         if backend == "pallas":
             fn = _build_pallas_fn(instrs, mask_outputs, analysis, widths,
-                                  interpret, plan)
+                                  interpret, plan, arith)
         else:
-            fn = _build_jnp_fn(instrs, mask_outputs, analysis, plan)
+            fn = _build_jnp_fn(instrs, mask_outputs, analysis, plan, arith)
         if mesh is not None:
             fn = dist.shard_program_fn(
                 fn, mesh, shard_axes,
@@ -704,7 +914,7 @@ def compile_program(relation: eng.PimRelation,
         _FN_CACHE.put(sig, fn)
 
     return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
-                           plan, backend, relation.layout.n_words, fn,
+                           plan, arith, backend, relation.layout.n_words, fn,
                            mesh=mesh, shard_axes=shard_axes,
                            mat_attrs=mat_attrs)
 
@@ -728,7 +938,7 @@ def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult
 # Backend lowerings
 # --------------------------------------------------------------------------
 def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
-                  plan: ReducePlan):
+                  plan: ReducePlan, arith: ArithPlan):
     from repro.kernels import materialize as kmat  # jnp lowering lives there
 
     keep = frozenset(mask_outputs)
@@ -736,6 +946,8 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
     jobs_at: Dict[int, List[Tuple[int, SumJob]]] = {}
     for j, job in enumerate(plan.sum_jobs):
         jobs_at.setdefault(job.exec_at, []).append((j, job))
+    batch_at = {b[0]: b for b in arith.batches}
+    batched = arith.batched_indices
 
     def _run(planes: Dict[str, jnp.ndarray], valid: jnp.ndarray):
         ev = BitwiseEvaluator(lambda a: planes[a], valid)
@@ -757,6 +969,10 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
                     kmat.materialize_planes(
                         [ev.planes(a) for a in ins.attrs],
                         ev.masks[ins.mask])
+            elif i in batch_at:
+                ev.execute_arith_batch([instrs[j] for j in batch_at[i]])
+            elif i in batched:
+                pass                   # ran with its batch at batch_at
             else:
                 ev.execute(ins)
             for j, job in jobs_at.get(i, ()):
@@ -774,7 +990,7 @@ def _build_jnp_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
 
 def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
                      widths: Dict[str, int], interpret: bool,
-                     plan: ReducePlan):
+                     plan: ReducePlan, arith: ArithPlan):
     from repro.kernels import materialize as kmat
     from repro.kernels import program as kprog  # lazy: optional path
     from .distributed import combine_minmax_candidates
@@ -812,6 +1028,7 @@ def _build_pallas_fn(instrs, mask_outputs, analysis: ProgramAnalysis,
             stacked, instrs=instrs, attr_rows=attr_rows, valid_row=r0,
             mask_outputs=kernel_masks, sum_jobs=plan.sum_jobs,
             mm_jobs=plan.mm_jobs, frees=frees,
+            arith_batches=arith.batches,
             n_pc_cols=plan.n_pc_cols, n_mm_cols=plan.n_mm_cols,
             interpret=interpret)
 

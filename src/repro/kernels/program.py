@@ -19,6 +19,13 @@ reduce** of the program:
   a found flag per tile; the surrounding jit reduces them with the same
   cross-candidate combine the distributed path applies across shards
   (``core.distributed.combine_minmax_candidates``).
+* **Derived arithmetic** lowers carry-save (``core.program.plan_arith``):
+  every Multiply's partial products reduce in a log-depth 3:2 compressor
+  tree (``engine.csa_reduce``) followed by ONE carry-propagate pass, and
+  consecutive independent Add/Multiply instructions share one *batched*
+  final pass — the serialized carry-chain depth (and with it the unrolled
+  op count Mosaic/XLA must compile) drops from O(addends x bits) to
+  O(addends + bits) per instruction.
 
 Each grid step stages one tile of every *touched* source plane into VMEM
 exactly once; the unrolled op sequence (immediates specialise it at trace
@@ -30,7 +37,10 @@ the per-tile VMEM working set tracks ``peak_live_planes``.
 VMEM budget per grid step: (source rows + peak live planes) x BLOCK_W x
 4 B plus the (1, n_pc) accumulator — the worst evaluated program (TPC-H
 Q1: ~55 source + ~90 live derived planes, ~200 accumulator columns) stays
-under 1.5 MiB at BLOCK_W = 2048.
+under 1.5 MiB at BLOCK_W = 2048. The CSA tree transiently holds one
+multiply's ungated partial-product stacks (Q1's widest: 8 x 39 planes per
+tile) before compression collapses them; Mosaic is free to schedule the
+3:2 levels eagerly, keeping the peak well under the ~2x headroom left.
 
 Distributed execution (``core.distributed.shard_program_fn``) wraps the
 whole program function — this kernel included — in ``shard_map``: the
@@ -59,7 +69,7 @@ BLOCK_W = 2048
 
 def _program_kernel(stacked_ref, masks_ref, pc_ref, mm_ref, *, instrs,
                     attr_rows, valid_row, mask_outputs, sum_jobs, mm_jobs,
-                    frees):
+                    frees, arith_batches):
     from repro.core.program import BitwiseEvaluator, _reduce_minmax_bits
 
     allp = stacked_ref[...]                      # (rows, block_w) in VMEM
@@ -76,6 +86,8 @@ def _program_kernel(stacked_ref, masks_ref, pc_ref, mm_ref, *, instrs,
     for job in sum_jobs:
         jobs_at.setdefault(job.exec_at, []).append(job)
     mm_at = {mj.exec_at: mj for mj in mm_jobs}
+    batch_at = {b[0]: b for b in arith_batches}
+    batched = {i for b in arith_batches for i in b}
 
     for i, ins in enumerate(instrs):
         if ins.kind in ("ReduceSum", "Materialize"):
@@ -89,6 +101,12 @@ def _program_kernel(stacked_ref, masks_ref, pc_ref, mm_ref, *, instrs,
                 ev.planes(mj.attr)[:mj.width], ev.masks[mj.mask], mj.is_max)
             mm_ref[0, mj.col_start:mj.col_start + mj.width] = bits
             mm_ref[0, mj.col_start + mj.width] = found.astype(jnp.int32)
+        elif i in batch_at:
+            # Independent derived-arith run: per-member CSA trees + ONE
+            # batched carry-propagate pass (core.program.plan_arith).
+            ev.execute_arith_batch([instrs[j] for j in batch_at[i]])
+        elif i in batched:
+            pass                       # ran with its batch at batch_at
         else:
             ev.execute(ins)
         for job in jobs_at.get(i, ()):
@@ -123,6 +141,7 @@ def fused_program(stacked: jax.Array, *,
                   sum_jobs: Sequence,
                   mm_jobs: Sequence,
                   frees: Tuple[Tuple[str, ...], ...],
+                  arith_batches: Tuple[Tuple[int, ...], ...] = (),
                   n_pc_cols: int,
                   n_mm_cols: int,
                   block_w: int = BLOCK_W,
@@ -154,7 +173,7 @@ def fused_program(stacked: jax.Array, *,
         _program_kernel, instrs=tuple(instrs), attr_rows=dict(attr_rows),
         valid_row=valid_row, mask_outputs=tuple(mask_outputs),
         sum_jobs=tuple(sum_jobs), mm_jobs=tuple(mm_jobs),
-        frees=tuple(frees))
+        frees=tuple(frees), arith_batches=tuple(arith_batches))
     masks, pc_totals, mm_tiles = pl.pallas_call(
         kernel,
         grid=grid,

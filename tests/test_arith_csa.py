@@ -1,0 +1,230 @@
+"""Carry-save arithmetic pipeline vs the ripple-carry oracle vs NumPy.
+
+Property tests for the CSA (3:2 compressor) lowering of bit-serial
+add/multiply/subtract: primitive level (``engine.add_planes_csa`` /
+``mul_planes_csa`` against the ripple oracle and exact NumPy ints at
+random widths, truncation/overflow boundaries and non-tile-multiple word
+counts) and program level (whole compiled programs with arith batching on
+both the jnp and Pallas backends against the eager engine). Also the
+regression coverage for the two satellite bugfixes: subtract's ``+1``
+fused into the adder carry-in (``RSubImm``, Q1/Q6's ``100 - l_discount``,
+at boundary values) and the multiply accumulator copy-through.
+"""
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bitslice, cost_model, engine, isa
+from repro.core import program as prog
+from repro.db import compiler as C
+
+
+def _pack(vals, width, W):
+    return jnp.asarray(bitslice.pack_bits(np.asarray(vals), width, W))
+
+
+def _unpack(planes, n):
+    return bitslice.unpack_bits(np.asarray(planes), n)
+
+
+# --------------------------------------------------------------------------
+# Primitive level
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 16), st.integers(1, 12),
+       st.integers(0, 2**31))
+def test_mul_csa_vs_oracle_vs_numpy(n, wa, wb, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << wa, n)
+    b = rng.integers(0, 1 << wb, n)
+    W = bitslice.pad_words(n)        # non-tile-multiple n pads with zeros
+    pa, pb = _pack(a, wa, W), _pack(b, wb, W)
+    # Full width, truncating (overflow wraps mod 2^out) and widening.
+    for out in (wa + wb, max(1, wa - 1), wa + wb + 3):
+        want = (a * b) & ((1 << out) - 1)
+        got = _unpack(engine.mul_planes_csa(pa, pb, out), n)
+        ref = _unpack(engine.mul_planes(pa, pb, out), n)
+        assert (ref == want).all(), "ripple oracle diverged from numpy"
+        assert (got == want).all(), "CSA multiply diverged from numpy"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 16),
+       st.sampled_from([0, 1, 2, 3, 100, 255, 0x155, 0xFFF]),
+       st.integers(0, 2**31))
+def test_mul_imm_csa_vs_oracle_vs_numpy(n, wa, imm, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << wa, n)
+    W = bitslice.pad_words(n)
+    pa = _pack(a, wa, W)
+    wb = max(1, int(imm).bit_length())
+    for out in (wa + wb, max(1, wa - 2)):
+        want = (a * imm) & ((1 << out) - 1)
+        got = _unpack(engine.mul_imm_planes_csa(pa, imm, out), n)
+        ref = _unpack(engine.mul_imm_planes(pa, imm, out), n)
+        assert (ref == want).all()
+        assert (got == want).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2500), st.integers(1, 14), st.integers(1, 7),
+       st.integers(0, 2**31))
+def test_add_csa_multi_term_vs_numpy(n, w, k, seed):
+    rng = np.random.default_rng(seed)
+    vals = [rng.integers(0, 1 << w, n) for _ in range(k)]
+    W = bitslice.pad_words(n)
+    terms = [_pack(v, w, W) for v in vals]
+    out = w + 3
+    got = _unpack(engine.add_planes_csa(terms, out), n)
+    assert (got == sum(vals) & ((1 << out) - 1)).all()
+    # Carry-in threads through the single final pass.
+    got1 = _unpack(engine.add_planes_csa(terms, out, carry_in=1), n)
+    assert (got1 == (sum(vals) + 1) & ((1 << out) - 1)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2500), st.integers(1, 20), st.integers(0, 2**31))
+def test_sub_carry_in_fused(n, w, seed):
+    """Subtract = one adder pass with the +1 as carry-in (satellite fix),
+    exercised at the boundary values where the old two-pass form and the
+    fused form could diverge: a==b, b==0, a==2^w-1."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << w, n)
+    b = rng.integers(0, 1 << w, n)
+    hi, lo = np.maximum(a, b), np.minimum(a, b)
+    # Force boundary rows in every example.
+    hi[0] = lo[0] = (1 << w) - 1                       # a == b at max
+    if n > 1:
+        hi[1], lo[1] = (1 << w) - 1, 0                 # full range
+    if n > 2:
+        hi[2] = lo[2] = 0                              # a == b at zero
+    W = bitslice.pad_words(n)
+    got = _unpack(engine.sub_planes(_pack(hi, w, W), _pack(lo, w, W), w), n)
+    assert (got == hi - lo).all()
+
+
+def test_csa_tree_levels():
+    assert engine.csa_tree_levels(1) == 0
+    assert engine.csa_tree_levels(2) == 0
+    assert engine.csa_tree_levels(3) == 1
+    assert engine.csa_tree_levels(4) == 2
+    assert engine.csa_tree_levels(9) == 4
+    # log-depth: far fewer levels than addends as k grows
+    assert engine.csa_tree_levels(64) <= 11
+
+
+# --------------------------------------------------------------------------
+# Program level (RSubImm regression + batching, jnp & Pallas backends)
+# --------------------------------------------------------------------------
+def _lineitem_like(values, extra=None):
+    cols = {"l_discount": np.asarray(values)}
+    cols.update(extra or {})
+    return engine.PimRelation.from_columns("lineitem", cols)
+
+
+def test_rsub_imm_boundary_values_all_paths():
+    """Q1/Q6's ``100 - l_discount`` at the boundary values 0 and 100 (and
+    the full 0..100 range), checked per record on the eager engine and
+    both fused backends. (Materialize readback of the derived register on
+    eager/jnp; the Pallas materialize kernel consumes source attributes
+    only, so that path is checked per record via boundary-equality masks
+    plus the exact sum.)"""
+    vals = np.array([0, 100, 1, 99, 50, 10, 0, 100] + list(range(101)))
+    rel = _lineitem_like(vals)
+    comp = C.Compiler(rel)
+    reg, w = comp.compile_expr(C.RSubImm(100, C.Col("l_discount")))
+    want = 100 - vals
+
+    mat = comp.program + [isa.Materialize(dest="out", attrs=(reg,),
+                                          mask="__valid__", n_bits=w)]
+    e = engine.Engine(rel)
+    e.run(mat)
+    assert (e.read_materialized("out")[reg] == want).all()
+    cp = prog.compile_program(rel, mat)
+    assert (prog.run_program(cp, rel).materialized("out")[reg] == want).all()
+
+    boundary = (0, 1, 50, 99, 100)
+    checked = comp.program + [
+        isa.EqualImm(dest=f"m{v}", attr=reg, imm=100 - v, n_bits=w)
+        for v in boundary
+    ] + [isa.ReduceSum(dest="s", attr=reg, mask="__valid__", n_bits=w)]
+    for backend in ("jnp", "pallas"):
+        cp = prog.compile_program(
+            rel, checked, mask_outputs=tuple(f"m{v}" for v in boundary),
+            backend=backend)
+        r = prog.run_program(cp, rel)
+        for v in boundary:
+            assert (r.mask(f"m{v}") == (want == 100 - v)).all(), (backend, v)
+        assert r.scalar("s") == int(want.sum()), backend
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 1500), st.integers(1, 10), st.integers(1, 6),
+       st.integers(0, 2**31))
+def test_program_arith_batching_parity(n, wa, wb, seed):
+    """Independent Multiply/Add chains batch into one stacked CSA final
+    pass; results stay bit-exact vs the eager ripple oracle on both
+    backends at non-tile-multiple record counts."""
+    rng = np.random.default_rng(seed)
+    cols = {"a": rng.integers(0, 1 << wa, n),
+            "b": rng.integers(0, 1 << wb, n),
+            "c": rng.integers(0, 1 << wa, n)}
+    rel = engine.PimRelation.from_columns("t", cols)
+    p = [
+        isa.Multiply(dest="m1", attr_a="a", attr_b="b",
+                     n_bits=wa + wb, m_bits=wb),
+        isa.Multiply(dest="m2", attr_a="c", attr_b="b",
+                     n_bits=wa + wb, m_bits=wb),
+        isa.Add(dest="s1", attr_a="a", attr_b="c", n_bits=wa + 1),
+        isa.Multiply(dest="m3", attr_a="m1", attr_b="b",
+                     n_bits=wa + 2 * wb, m_bits=wb),   # depends on m1
+        isa.ReduceSum(dest="r1", attr="m1", mask="__valid__",
+                      n_bits=wa + wb),
+        isa.ReduceSum(dest="r2", attr="m2", mask="__valid__",
+                      n_bits=wa + wb),
+        isa.ReduceSum(dest="r3", attr="s1", mask="__valid__", n_bits=wa + 1),
+        isa.ReduceSum(dest="r4", attr="m3", mask="__valid__",
+                      n_bits=wa + 2 * wb),
+    ]
+    e = engine.Engine(rel)
+    e.run(p)
+    for backend in ("jnp", "pallas"):
+        cp = prog.compile_program(rel, p, backend=backend)
+        # The three independent ops share one batch; m3 depends on m1 so
+        # it must not join it.
+        assert cp.arith.batches == ((0, 1, 2),)
+        r = prog.run_program(cp, rel)
+        for dest in ("r1", "r2", "r3", "r4"):
+            assert r.scalar(dest) == int(e.read_scalar(dest)), (backend, dest)
+
+
+def test_q1_lowering_shallower_and_cycles_unchanged():
+    """The CSA plan must cut Q1's serialized arith depth while leaving the
+    Table 4 cycle accounting bit-identical (the ISA program is the same
+    instruction list the eager engine executes)."""
+    from repro.db import database, queries, tpch
+
+    db = database.PimDatabase(tpch.generate(sf=0.001, seed=0))
+    spec = queries.get_query("Q1")
+    rel = db.relations["lineitem"]
+    c, mask_reg, _ = db._compile_relation(rel, spec, spec.filters["lineitem"])
+    cp = prog.compile_program(rel, c.program, mask_outputs=(mask_reg,))
+    assert cp.arith_depth_csa < cp.arith_depth_ripple / 3
+    assert cp.n_arith_batches >= 1
+    e = engine.Engine(rel)
+    e.run(c.program)
+    # classify_program raises on any non-ISA kind, so this both checks
+    # the totals and proves no lowering-internal op leaked into the trace.
+    assert cost_model.classify_program(e.trace).cycles_total == \
+        cp.paper_cycles()
+    lowering = cost_model.classify_lowering(cp.arith.steps)
+    assert lowering.paper_cycles == 0
+    assert lowering.csa_compressions > 0
+    # depth = compressor levels + serialized carry-propagate bits
+    assert lowering.carry_propagate_bits <= cp.arith_depth_csa
+
+
+def test_classify_lowering_rejects_unknown_kind():
+    import pytest
+    with pytest.raises(ValueError):
+        cost_model.classify_lowering((("warp_shuffle", 3),))
