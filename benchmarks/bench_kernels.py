@@ -84,7 +84,7 @@ def collect_benches(sf: float = DEFAULT_SF) -> List[dict]:
     # numpy full-width baseline scan
     t0 = time.perf_counter()
     for _ in range(5):
-        base = (key >= lo) & (key < hi)
+        (key >= lo) & (key < hi)  # timed baseline scan; result discarded
     us_np = (time.perf_counter() - t0) / 5 * 1e6
     rows.append(_row("kernel_range_filter_bitsliced", us_bit, cold_bit,
                      records_per_us=round(N / us_bit),
@@ -167,7 +167,38 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
     rows.extend(bench_q1_arith(db))
     rows.extend(bench_e2e(db))
     rows.extend(bench_distributed_program(db, spec))
+    rows.extend(bench_verify(db))
     return rows
+
+
+def bench_verify(db) -> List[dict]:
+    """Static-verifier wall time on the largest query program (Q1): the
+    verifier runs on every compile-time cache miss, so this row is the
+    compile-latency tax it adds — check_regression gates it so a pass
+    that silently goes quadratic fails CI before it slows cold compiles."""
+    from repro.analysis import passes as P
+    from repro.db import queries
+
+    spec = queries.get_query("Q1")
+    rel = db.relations["lineitem"]
+    c, mask_reg, _ = db._compile_relation(
+        rel, spec, spec.filters["lineitem"])
+    instrs = tuple(c.program)
+
+    def verify_once() -> int:
+        ctx = P.build_context(rel, instrs, (mask_reg,), backend="jnp")
+        return len(P.run_passes(ctx))
+
+    t0 = time.perf_counter()
+    n_diags = verify_once()
+    cold = (time.perf_counter() - t0) * 1e6
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        verify_once()
+    warm = (time.perf_counter() - t0) / reps * 1e6
+    return [_row("analysis_verify", warm, cold,
+                 n_instrs=len(instrs), n_diags=n_diags)]
 
 
 def bench_e2e(db) -> List[dict]:

@@ -49,6 +49,10 @@ GATES = [
     ("q6_program_fused_vs_eager", "cold_us", "compile"),
     ("q3_e2e", "cold_us", "compile"),
     ("q14_e2e", "cold_us", "compile"),
+    # Static verifier: runs on every compile-time cache miss, so its wall
+    # time is part of the cold-compile budget — gate it so a pass going
+    # quadratic fails here instead of showing up as compile-latency drift.
+    ("analysis_verify", "warm_us", "time"),
 ]
 
 

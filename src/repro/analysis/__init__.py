@@ -1,0 +1,51 @@
+"""PIM-IR static verifier: pass framework, diagnostics, lint driver.
+
+``repro.analysis.diagnostics`` is stdlib-only and re-exported eagerly so
+``core.cost_model`` (and anything else that only needs the diagnostic
+types) can import it without pulling in jax. The pass framework
+(``repro.analysis.passes``) imports the core modules, so its entry
+points are re-exported through thin lazy wrappers.
+
+See ``src/repro/analysis/README.md`` for the pass catalog and the
+``python -m repro.analysis.lint`` driver.
+"""
+from .diagnostics import (Diagnostic, ProgramVerificationError,
+                          SEVERITIES, count_by_severity,
+                          format_diagnostics)
+
+__all__ = [
+    "Diagnostic", "ProgramVerificationError", "SEVERITIES",
+    "count_by_severity", "format_diagnostics",
+    "build_context", "run_passes", "verify_compile", "verify_context",
+    "verify_program", "write_profile",
+]
+
+
+def build_context(*args, **kwargs):
+    from . import passes
+    return passes.build_context(*args, **kwargs)
+
+
+def run_passes(*args, **kwargs):
+    from . import passes
+    return passes.run_passes(*args, **kwargs)
+
+
+def verify_context(*args, **kwargs):
+    from . import passes
+    return passes.verify_context(*args, **kwargs)
+
+
+def verify_program(*args, **kwargs):
+    from . import passes
+    return passes.verify_program(*args, **kwargs)
+
+
+def verify_compile(*args, **kwargs):
+    from . import passes
+    return passes.verify_compile(*args, **kwargs)
+
+
+def write_profile(*args, **kwargs):
+    from . import endurance
+    return endurance.write_profile(*args, **kwargs)

@@ -1,0 +1,112 @@
+"""Lint driver: statically verify every TPC-H relation program.
+
+``python -m repro.analysis.lint`` builds the full query inventory — all
+19 TPC-H query specs (filter programs with their group/aggregate tails),
+the end-to-end materialize variants of every query with a host stage,
+and a scan-all program per PIM relation — and runs every analysis pass
+over each program on all three backend schedules ("trace", "jnp",
+"pallas"). No XLA executable is built: only the static front half of the
+compile pipeline runs, so the whole sweep takes seconds.
+
+Exit status is non-zero when any error-severity diagnostic is produced
+(or any warning, under ``--strict``); CI runs this as a job so a change
+that makes any emitted program fail verification fails the build.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Tuple
+
+from repro.core import engine as eng
+from repro.db import exec as E
+from repro.db import queries as Q
+from repro.db import tpch
+from repro.db.compiler import Compiler
+from repro.db.database import PimDatabase
+
+from .diagnostics import Diagnostic
+from .passes import BACKENDS, build_context, run_passes
+
+Program = Tuple[str, eng.PimRelation, tuple, Tuple[str, ...]]
+
+
+def collect_programs(db: PimDatabase) -> List[Program]:
+    """(label, relation, instrs, mask_outputs) for every program the
+    database would compile: query filters, materialize variants of the
+    end-to-end queries, and per-relation scan-alls."""
+    programs: List[Program] = []
+    for spec in Q.all_queries():
+        for rel_name, pred in spec.filters.items():
+            rel = db.relations[rel_name]
+            c, mask_reg, _ = db._compile_relation(rel, spec, pred)
+            programs.append((f"{spec.name}/{rel_name}", rel,
+                             tuple(c.program), (mask_reg,)))
+        if spec.host is not None:
+            pim_stage, _ = E.split_query(spec)
+            for rel_name, pred, cols in pim_stage:
+                rel = db.relations[rel_name]
+                c = Compiler(rel)
+                mask_reg = (c.compile_filter(pred, with_transform=False)
+                            if pred is not None else c.compile_scan_all())
+                c.compile_materialize(mask_reg, cols)
+                programs.append((f"{spec.name}/{rel_name}/materialize",
+                                 rel, tuple(c.program), ()))
+    for rel_name, rel in sorted(db.relations.items()):
+        c = Compiler(rel)
+        m = c.compile_scan_all()
+        programs.append((f"scan-all/{rel_name}", rel,
+                         tuple(c.program), (m,)))
+    return programs
+
+
+def lint(sf: float = 0.002, strict: bool = False,
+         verbose: bool = False) -> int:
+    t0 = time.perf_counter()
+    db = PimDatabase(tpch.generate(sf=sf, seed=0))
+    programs = collect_programs(db)
+
+    totals = {"error": 0, "warning": 0, "info": 0}
+    n_checked = 0
+    for label, rel, instrs, mask_outputs in programs:
+        for backend in BACKENDS:
+            ctx = build_context(rel, instrs, mask_outputs, backend=backend)
+            diags = run_passes(ctx)
+            n_checked += 1
+            shown: List[Diagnostic] = []
+            for d in diags:
+                totals[d.severity] += 1
+                if d.severity != "info" or verbose:
+                    shown.append(d)
+            for d in shown:
+                print(f"{label} [{backend}] {d.format()}")
+
+    dt = time.perf_counter() - t0
+    print(f"repro.analysis.lint: {len(programs)} programs x "
+          f"{len(BACKENDS)} backends = {n_checked} checks in {dt:.2f}s "
+          f"-- {totals['error']} errors, {totals['warning']} warnings, "
+          f"{totals['info']} info")
+    if totals["error"] or (strict and totals["warning"]):
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Statically verify all TPC-H relation programs.")
+    ap.add_argument("--sf", type=float, default=0.002,
+                    help="TPC-H scale factor of the generated database "
+                         "(default 0.002; program shape, not data, is "
+                         "what is checked)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings too")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print info-severity diagnostics")
+    a = ap.parse_args(argv)
+    return lint(sf=a.sf, strict=a.strict, verbose=a.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

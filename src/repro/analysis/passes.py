@@ -1,0 +1,172 @@
+"""Pass framework of the PIM-IR static verifier.
+
+A *pass* is a function ``(PassContext) -> List[Diagnostic]`` registered
+under a name with :func:`register_pass`. The context carries one
+relation program plus everything ``compile_program`` derives from it
+(liveness analysis, reduce plan, arith plan, free schedule), so passes
+can re-prove the planner's claims independently and report disagreements
+as localized diagnostics instead of wrong query results.
+
+Entry points:
+
+* :func:`build_context` — replicate ``compile_program``'s static front
+  half (analysis + plans + frees) for a raw instruction list, without
+  building any XLA executable. ``backend="trace"`` verifies the eager
+  engine's view (no plans, no frees).
+* :func:`run_passes` — run all (or selected) passes, return diagnostics.
+* :func:`verify_context` / :func:`verify_program` — run passes and raise
+  :class:`~repro.analysis.diagnostics.ProgramVerificationError` on any
+  error-severity diagnostic.
+
+``compile_program`` calls :func:`verify_context` on every executable
+cache miss (see ``core.program``), so verification is always-on at
+compile time and adds zero work to the warm path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Callable, Dict, FrozenSet, List, Mapping, Optional,
+                    Sequence, Tuple)
+
+from repro.core import engine as eng
+from repro.core import isa
+from repro.core import program as prog
+
+from .diagnostics import Diagnostic, ProgramVerificationError
+
+BACKENDS = ("trace", "jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class PassContext:
+    """One relation program and the compile-time facts passes check.
+
+    ``backend="trace"`` models the eager engine: reduces execute at their
+    own position and nothing is freed, so ``plan``/``arith``/``frees``
+    are None. The fused backends ("jnp"/"pallas") carry the plans and
+    the exact free schedule the lowering uses.
+    """
+    instrs: Tuple[isa.PimInstruction, ...]
+    source_widths: Mapping[str, int]        # relation attr -> planes
+    keep: FrozenSet[str]                    # registers pinned as outputs
+    backend: str = "trace"
+    analysis: Optional[prog.ProgramAnalysis] = None
+    plan: Optional[prog.ReducePlan] = None
+    arith: Optional[prog.ArithPlan] = None
+    frees: Optional[Tuple[Tuple[str, ...], ...]] = None
+
+    def is_source(self, name: str) -> bool:
+        return name in self.source_widths
+
+
+PassFn = Callable[[PassContext], List[Diagnostic]]
+PASSES: Dict[str, PassFn] = {}
+
+
+def register_pass(name: str) -> Callable[[PassFn], PassFn]:
+    def deco(fn: PassFn) -> PassFn:
+        PASSES[name] = fn
+        return fn
+    return deco
+
+
+_PASSES_LOADED = False
+
+
+def _ensure_passes_loaded() -> None:
+    # The pass modules import this module for the registry, so they are
+    # loaded lazily on first use rather than at import time.
+    global _PASSES_LOADED
+    if not _PASSES_LOADED:
+        from . import batches, defuse, endurance, kinds  # noqa: F401
+        _PASSES_LOADED = True
+
+
+def build_context(relation: eng.PimRelation,
+                  instrs: Sequence[isa.PimInstruction],
+                  mask_outputs: Sequence[str] = (),
+                  backend: str = "jnp",
+                  frees: Optional[Tuple[Tuple[str, ...], ...]] = None
+                  ) -> PassContext:
+    """Derive a PassContext the way ``compile_program`` would.
+
+    Mirrors the compile pipeline exactly: the pinned ``keep`` set is the
+    requested mask outputs plus every Materialize mask, the plans come
+    from ``plan_reduces``/``plan_arith``, and (unless overridden, which
+    the mutation tests use to seed corrupted schedules) ``frees`` is the
+    ``frees_by_instr`` schedule both lowerings execute.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    instrs = tuple(instrs)
+    mask_outputs = tuple(mask_outputs)
+    mat_masks = []
+    for ins in instrs:
+        if ins.kind == "Materialize" and ins.mask not in mat_masks:
+            mat_masks.append(ins.mask)
+    keep = mask_outputs + tuple(m for m in mat_masks
+                                if m not in mask_outputs and m != "__valid__")
+    analysis = prog.analyze_program(instrs, relation, keep=keep)
+    source_widths = {a: relation.width_of(a) for a in relation.planes}
+    plan = arith = None
+    if backend != "trace":
+        widths = {a: source_widths[a] for a in analysis.source_attrs}
+        plan = prog.plan_reduces(instrs, analysis, widths)
+        arith = prog.plan_arith(instrs, analysis, widths)
+        if frees is None:
+            frees = prog.frees_by_instr(len(instrs), plan.last_use,
+                                        frozenset(keep))
+    return PassContext(instrs=instrs, source_widths=source_widths,
+                       keep=frozenset(keep), backend=backend,
+                       analysis=analysis, plan=plan, arith=arith,
+                       frees=frees)
+
+
+def run_passes(ctx: PassContext,
+               names: Optional[Sequence[str]] = None
+               ) -> Tuple[Diagnostic, ...]:
+    """Run the requested passes (default: all registered) over one
+    context; diagnostics come back in pass-registration order."""
+    _ensure_passes_loaded()
+    selected = tuple(PASSES) if names is None else tuple(names)
+    out: List[Diagnostic] = []
+    for name in selected:
+        out.extend(PASSES[name](ctx))
+    return tuple(out)
+
+
+def verify_context(ctx: PassContext,
+                   names: Optional[Sequence[str]] = None
+                   ) -> Tuple[Diagnostic, ...]:
+    """Run passes; raise ProgramVerificationError on any error finding."""
+    diags = run_passes(ctx, names)
+    if any(d.is_error for d in diags):
+        raise ProgramVerificationError(diags)
+    return diags
+
+
+def verify_program(relation: eng.PimRelation,
+                   instrs: Sequence[isa.PimInstruction],
+                   mask_outputs: Sequence[str] = (),
+                   backend: str = "jnp") -> Tuple[Diagnostic, ...]:
+    """One-call verification of a raw relation program (no XLA build)."""
+    return verify_context(build_context(relation, instrs, mask_outputs,
+                                        backend=backend))
+
+
+def verify_compile(instrs: Tuple[isa.PimInstruction, ...],
+                   relation: eng.PimRelation,
+                   analysis: prog.ProgramAnalysis,
+                   plan: prog.ReducePlan,
+                   arith: prog.ArithPlan,
+                   keep: FrozenSet[str],
+                   backend: str) -> Tuple[Diagnostic, ...]:
+    """The ``compile_program`` hook: verify using the analysis/plans the
+    compile pipeline already computed (nothing is re-derived), raising a
+    localized ProgramVerificationError on error findings."""
+    source_widths = {a: relation.width_of(a) for a in relation.planes}
+    frees = prog.frees_by_instr(len(instrs), plan.last_use, keep)
+    ctx = PassContext(instrs=instrs, source_widths=source_widths,
+                      keep=keep, backend=backend, analysis=analysis,
+                      plan=plan, arith=arith, frees=frees)
+    return verify_context(ctx)

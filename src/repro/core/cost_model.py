@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Sequence
 
+from repro.analysis.diagnostics import ProgramVerificationError
+
 from . import isa
 from .bitslice import CROSSBAR_COLS, CROSSBAR_ROWS
 
@@ -141,9 +143,15 @@ def classify_lowering(steps: Sequence[tuple]) -> LoweringCost:
     records. Unknown kinds are an error — the cost model must explicitly
     know every internal kind so none silently grows paper cycles."""
     fields = dict.fromkeys(_LOWERING_KINDS, 0)
-    for kind, count in steps:
+    for step_index, (kind, count) in enumerate(steps):
         if kind not in fields:
-            raise ValueError(f"unknown lowering kind {kind!r}")
+            raise ProgramVerificationError.single(
+                "classify_lowering",
+                f"unknown lowering kind {kind!r} (step {step_index}): the "
+                "cost model must know every internal kind so none "
+                "silently grows paper cycles",
+                instr_index=step_index, instr_kind=kind,
+                header="lowering classification failed")
         fields[kind] += int(count)
     return LoweringCost(csa_compressions=fields["csa_compress"],
                         carry_propagate_bits=fields["carry_propagate"],
@@ -153,7 +161,7 @@ def classify_lowering(steps: Sequence[tuple]) -> LoweringCost:
 def classify_program(trace: Sequence[isa.PimInstruction]) -> ProgramCost:
     cost = ProgramCost()
     live_cells = 0
-    for ins in trace:
+    for i, ins in enumerate(trace):
         c = ins.cycles()
         k = ins.kind
         if k in _FILTER_KINDS:
@@ -166,7 +174,11 @@ def classify_program(trace: Sequence[isa.PimInstruction]) -> ProgramCost:
             cost.cycles_reduce_row += ins.row_cycles()
             cost.cycles_reduce_col += c - ins.row_cycles()
         else:
-            raise ValueError(k)
+            raise ProgramVerificationError.single(
+                "classify_program",
+                f"instruction kind {k!r} has no Table 4 cycle class",
+                instr_index=i, instr_kind=k, register=ins.dest,
+                header="cost classification failed")
         live_cells += ins.intermediate_cells() + 1   # +1 output cell
         cost.intermediate_cells_peak = max(cost.intermediate_cells_peak, live_cells)
         cost.n_instructions += 1
@@ -305,7 +317,8 @@ def query_energy(cost: ProgramCost, timing: QueryTiming, n_crossbars: int,
 # --------------------------------------------------------------------------
 def endurance_ops_per_cell(cost: ProgramCost, years: float = 10.0,
                            exec_time_s: float = 1.0,
-                           hw: HwParams = DEFAULT_HW) -> float:
+                           hw: HwParams = DEFAULT_HW,
+                           busiest_row_ops: float | None = None) -> float:
     """Required cell endurance for back-to-back execution over ``years``.
 
     Per §6.4: computation on a row is assumed uniformly spread over the
@@ -313,14 +326,22 @@ def endurance_ops_per_cell(cost: ProgramCost, years: float = 10.0,
     (ops experienced by the busiest row) / 512. Column-wise cycles hit
     every row once; row-wise cycles hit the busiest (result) row ~every
     cycle during its tree iterations — bounded by total row cycles.
+
+    ``busiest_row_ops`` overrides the class-aggregate approximation with
+    a trace-derived count (``repro.analysis.endurance.write_profile``:
+    per-instruction ``isa.row_write_ops()`` sums), which the verifier's
+    endurance pass and ``db.database.cost_report`` supply.
     """
-    # Row-wise reduce moves spread over the binary tree: the busiest
-    # (result) row receives a write in each of log2(rows)=10 iterations,
-    # ~1/100 of total row cycles (2000n total vs ~20n on the result row).
-    busiest_row_ops = (cost.cycles_filter + cost.cycles_arith +
-                       cost.cycles_reduce_col + cost.cycles_reduce_row // 100 +
-                       cost.cycles_col_transform // CROSSBAR_ROWS + 2)
-    per_query = busiest_row_ops / CROSSBAR_COLS
+    if busiest_row_ops is None:
+        # Row-wise reduce moves spread over the binary tree: the busiest
+        # (result) row receives a write in each of log2(rows)=10
+        # iterations, ~1/100 of total row cycles (2000n total vs ~20n on
+        # the result row).
+        busiest_row_ops = (cost.cycles_filter + cost.cycles_arith +
+                           cost.cycles_reduce_col +
+                           cost.cycles_reduce_row // 100 +
+                           cost.cycles_col_transform // CROSSBAR_ROWS)
+    per_query = (busiest_row_ops + 2) / CROSSBAR_COLS
     executions = years * 365.25 * 24 * 3600 / max(exec_time_s, 1e-9)
     return per_query * executions
 

@@ -43,6 +43,17 @@ class PimInstruction:
     def col_cycles(self) -> int:
         return self.cycles() - self.row_cycles()
 
+    def row_write_ops(self) -> float:
+        """Cell writes this instruction costs the *busiest row* (§6.4).
+
+        Every column-wise stateful cycle conditions one cell per row, so
+        a row sees one write per column cycle. Row-wise cycles touch one
+        row each, spread across the crossbar — the per-row share is the
+        per-class amortization the aggregate endurance model uses (see
+        ``cost_model.endurance_ops_per_cell``).
+        """
+        return float(self.col_cycles())
+
     @property
     def kind(self) -> str:
         return type(self).__name__
@@ -274,6 +285,11 @@ class ReduceSum(PimInstruction):
         # Calibrated split: moves ≈ (2254-254)/2254 of the per-bit cost.
         return 2000 * self.n_bits + 2800
 
+    def row_write_ops(self) -> float:
+        # Row-wise move cycles spread over the tree: ~1% land on any one
+        # row (the §6.4 endurance model's reduce amortization).
+        return self.col_cycles() + self.row_cycles() / 100.0
+
 
 @dataclasses.dataclass(frozen=True)
 class ReduceMinMax(PimInstruction):
@@ -290,6 +306,9 @@ class ReduceMinMax(PimInstruction):
 
     def row_cycles(self) -> int:
         return 2000 * self.n_bits + 100
+
+    def row_write_ops(self) -> float:
+        return self.col_cycles() + self.row_cycles() / 100.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +339,11 @@ class Materialize(PimInstruction):
     def row_cycles(self) -> int:
         return 1024
 
+    def row_write_ops(self) -> float:
+        # The transform's writes land on one row per cycle across all
+        # 1024 crossbar rows (§6.4 amortizes it the same way).
+        return self.cycles() / 1024.0
+
 
 @dataclasses.dataclass(frozen=True)
 class ColumnTransform(PimInstruction):
@@ -336,6 +360,9 @@ class ColumnTransform(PimInstruction):
     def row_cycles(self) -> int:
         # 2 NOTs per bit; second NOT is the row-wise placement (Fig. 6c).
         return 1024
+
+    def row_write_ops(self) -> float:
+        return self.cycles() / 1024.0
 
 
 # Stateful-logic cycle time (Table 3): 30 ns.

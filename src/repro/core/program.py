@@ -120,9 +120,12 @@ def analyze_program(instrs: Sequence[isa.PimInstruction],
                 last_use[r] = i
             else:
                 if r not in relation.planes:
-                    raise KeyError(
-                        f"instruction {i} ({ins.kind}) reads '{r}' which is "
-                        f"neither a prior dest nor a relation attribute")
+                    from repro.analysis import ProgramVerificationError
+                    raise ProgramVerificationError.single(
+                        "analyze",
+                        f"reads '{r}' which is neither a prior dest nor a "
+                        "relation attribute", instr_index=i,
+                        instr_kind=ins.kind, register=r)
                 if r not in source:
                     source.append(r)
         k = ins.kind
@@ -489,7 +492,11 @@ def plan_reduces(instrs: Sequence[isa.PimInstruction],
         sum_jobs.append(job)
         col += job.n_cols
         for r in (attr, *masks):             # operands live until the job
-            last_use[r] = max(last_use.get(r, -1), exec_at)
+            if r in analysis.reg_kind:       # registers only: extending a
+                last_use[r] = max(last_use.get(r, -1), exec_at)
+            # ...source attribute would schedule a phantom free of the
+            # relation's own planes (free is a no-op on sources, but the
+            # schedule must stay register-exact for the verifier).
     plane_reads = sum(s.width for s in sum_jobs) + sum(m.width
                                                        for m in mm_jobs)
     return ReducePlan(tuple(sum_jobs), tuple(mm_jobs), dest_slot, last_use,
@@ -896,6 +903,13 @@ def compile_program(relation: eng.PimRelation,
            mesh, shard_axes)
     fn = _FN_CACHE.get(sig)
     if fn is None:
+        # Static verification rides the cache miss: every program is
+        # checked once, before the (much more expensive) XLA build, and
+        # warm-path compiles re-dispatch the cached fn with zero added
+        # work. Raises ProgramVerificationError on any error finding.
+        from repro.analysis import passes as _vp  # lazy: analysis imports us
+        _vp.verify_compile(instrs, relation, analysis, plan, arith,
+                           frozenset(keep), backend)
         if backend == "pallas":
             fn = _build_pallas_fn(instrs, mask_outputs, analysis, widths,
                                   interpret, plan, arith)

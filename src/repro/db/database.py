@@ -17,6 +17,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import analysis
 from repro.core import cost_model as cm
 from repro.core import engine as eng
 from repro.core import isa
@@ -392,12 +393,16 @@ def cost_report(run: QueryRun, sf_scale: float = 1.0,
     pim_bytes = 0
     n_crossbars_busiest = 0
     exec_pages = 0
+    trace_row_ops = 0.0
     for rel_name, rr in run.relations.items():
         n_scaled = int(rr.n_records * sf_scale)
         cost = cm.classify_program(rr.trace)
         for f in dataclasses.fields(cm.ProgramCost):
             setattr(total, f.name,
                     getattr(total, f.name) + getattr(cost, f.name))
+        # Trace-derived §6.4 write pressure (per-instruction row_write_ops
+        # sums), replacing the class-aggregate approximation below.
+        trace_row_ops += analysis.write_profile(rr.trace).busiest_row_ops
         # baseline: scan predicate attrs (short-circuit + cacheline model),
         # then agg attrs for passing records
         sels = rr.filter_attr_sels or [1.0] * len(rr.filter_attr_bits)
@@ -431,7 +436,8 @@ def cost_report(run: QueryRun, sf_scale: float = 1.0,
                              baseline_ops=base_ops, hw=hw)
     energy = cm.query_energy(total, timing, n_crossbars_busiest, hw=hw)
     endurance = cm.endurance_ops_per_cell(
-        total, exec_time_s=timing.pimdb_total_s, hw=hw)
+        total, exec_time_s=timing.pimdb_total_s, hw=hw,
+        busiest_row_ops=trace_row_ops)
     return QueryCostReport(
         run.spec.name, run.spec.kind,
         dict(total=total.cycles_total, **total.breakdown()),
