@@ -9,10 +9,12 @@ executor vs the eager engine (TPC-H Q6), the grouped-aggregation
 executor on TPC-H Q1 (per-pass aggregate-plane reads: grouped popcounts
 vs one read per ReduceSum), the carry-save arithmetic lowering on Q1's
 ``charge`` expression (``q1_arith``: derived-plane op depth, CSA tree vs
-ripple-carry, next to its cold compile wall), and the end-to-end query
+ripple-carry, next to its cold compile wall), the end-to-end query
 subsystem on TPC-H Q3/Q14 (PIM filter + materialize dispatch vs host
 join/agg/order wall split, with the materialized-row count as a gated
-counter).
+counter), and cross-query fusion on the Q1+Q6+Q14 batch
+(``q1_q6_q14_concurrent``: one linked dispatch per relation, plane reads
+and warm wall sublinear in the number of simultaneous queries).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -168,7 +170,70 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
     rows.extend(bench_e2e(db))
     rows.extend(bench_distributed_program(db, spec))
     rows.extend(bench_verify(db))
+    rows.extend(bench_concurrent(db))
     return rows
+
+
+def bench_concurrent(db) -> List[dict]:
+    """Cross-query fusion headline: Q1+Q6+Q14 submitted as ONE batch.
+    ``run_queries`` canonicalizes, links, and dispatches one fused program
+    per touched relation (lineitem + part = 2 dispatches, vs 4 running the
+    three queries back to back), streaming each shared source plane once.
+    The row gates the dispatch count, the linked lineitem plane-read
+    total, and the sublinearity ratio (batch reads / costliest single,
+    x1000 so the count gate stays integral); ``exact`` asserts bit-parity
+    with the sequential per-query paths AND ratio <= 1.6."""
+    from repro.db import queries
+
+    specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
+
+    # Cold: first batch call pays the linked programs' XLA compiles
+    # (the linked lineitem program has a different cache signature than
+    # any single-query program compiled above).
+    t0 = time.perf_counter()
+    batch = db.run_queries(specs)
+    cold = (time.perf_counter() - t0) * 1e6
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        batch = db.run_queries(specs)
+    warm = (time.perf_counter() - t0) / reps * 1e6
+    stats = db.last_batch_stats
+    li = stats["relations"]["lineitem"]
+    batch_reads = li["plane_reads"]
+    demux_us = stats["demux_s"] * 1e6
+
+    # Sequential reference: the same three queries one at a time, for the
+    # dispatch count, per-single plane reads, and the parity oracle.
+    t0 = time.perf_counter()
+    seq = [db.run_pim(specs[0]), db.run_pim(specs[1]),
+           db.run_query(specs[2])]
+    seq_us = (time.perf_counter() - t0) * 1e6
+    singles = []
+    seq_dispatches = 0
+    for spec in specs:
+        db.run_queries([spec])
+        s1 = db.last_batch_stats
+        singles.append(s1["relations"]["lineitem"]["plane_reads"])
+        seq_dispatches += s1["n_dispatches"]
+
+    parity = (batch[0].aggregates == seq[0].aggregates
+              and batch[1].aggregates == seq[1].aggregates
+              and batch[2].rows == seq[2].rows)
+    ratio = batch_reads / max(singles)
+    return [_row("q1_q6_q14_concurrent", warm, cold,
+                 dispatches=stats["n_dispatches"],
+                 dispatches_sequential=seq_dispatches,
+                 plane_reads_batch=batch_reads,
+                 plane_reads_single_sum=sum(singles),
+                 plane_reads_single_max=max(singles),
+                 sublinearity_x1000=round(ratio * 1000),
+                 instrs_deduped=li["instrs_deduped"],
+                 demux_us=round(demux_us),
+                 sequential_us=round(seq_us),
+                 batch_speedup=round(seq_us / warm, 2),
+                 exact=parity and batch_reads < sum(singles)
+                 and ratio <= 1.6)]
 
 
 def bench_verify(db) -> List[dict]:

@@ -5,10 +5,15 @@ Compares a fresh ``bench_kernels.py --json`` run against the checked-in
 regresses by more than ``--max-ratio`` (default 1.5x): warm Q1/Q6 fused
 wall time, dispatch counts, the grouped executor's per-pass
 aggregate-plane-read counter, the arithmetic lowering's serialized
-plane-op depth, and — promoted from tabulated to gated since the
-carry-save arithmetic PR — per-query cold XLA compile latency. The full
-per-row compile-latency table still prints every run, so the trend the
-ROADMAP tracks has a visible trajectory in every CI log.
+plane-op depth, the cross-query-fusion batch row's dispatch count and
+plane-read sublinearity ratio (``q1_q6_q14_concurrent``: the linked
+batch must keep reading fewer planes than the three queries run back to
+back — its ``meta.exact`` additionally hard-fails on any loss of
+bit-parity with the sequential paths or a ratio above 1.6x the
+costliest single query), and — promoted from tabulated to gated since
+the carry-save arithmetic PR — per-query cold XLA compile latency. The
+full per-row compile-latency table still prints every run, so the trend
+the ROADMAP tracks has a visible trajectory in every CI log.
 
 Refreshing the baseline: run ``python benchmarks/bench_kernels.py --json
 --sf 0.005 --out benchmarks/baseline.json`` on the reference machine (CI
@@ -53,6 +58,15 @@ GATES = [
     # time is part of the cold-compile budget — gate it so a pass going
     # quadratic fails here instead of showing up as compile-latency drift.
     ("analysis_verify", "warm_us", "time"),
+    # Cross-query fusion: the Q1+Q6+Q14 batch must stay at one linked
+    # dispatch per relation with sublinear plane reads (ratio x1000 vs the
+    # costliest single query); growth in either means linking or the
+    # canonical-form CSE regressed.
+    ("q1_q6_q14_concurrent", "warm_us", "time"),
+    ("q1_q6_q14_concurrent", "cold_us", "compile"),
+    ("q1_q6_q14_concurrent", "meta.dispatches", "count"),
+    ("q1_q6_q14_concurrent", "meta.plane_reads_batch", "count"),
+    ("q1_q6_q14_concurrent", "meta.sublinearity_x1000", "count"),
 ]
 
 

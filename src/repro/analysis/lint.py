@@ -3,10 +3,13 @@
 ``python -m repro.analysis.lint`` builds the full query inventory — all
 19 TPC-H query specs (filter programs with their group/aggregate tails),
 the end-to-end materialize variants of every query with a host stage,
-and a scan-all program per PIM relation — and runs every analysis pass
-over each program on all three backend schedules ("trace", "jnp",
-"pallas"). No XLA executable is built: only the static front half of the
-compile pipeline runs, so the whole sweep takes seconds.
+a scan-all program per PIM relation, and LINKED multi-query programs
+(every adjacent pair plus a leading triple of the queries sharing each
+relation, built exactly the way ``PimDatabase.run_queries`` builds them:
+namespaced compile, ``core.program.link_programs``) — and runs every
+analysis pass over each program on all three backend schedules ("trace",
+"jnp", "pallas"). No XLA executable is built: only the static front half
+of the compile pipeline runs, so the whole sweep takes seconds.
 
 Exit status is non-zero when any error-severity diagnostic is produced
 (or any warning, under ``--strict``); CI runs this as a job so a change
@@ -61,11 +64,54 @@ def collect_programs(db: PimDatabase) -> List[Program]:
     return programs
 
 
+def collect_linked_programs(db: PimDatabase) -> List[Program]:
+    """Linked multi-query programs: for each PIM relation, every adjacent
+    pair of the queries touching it plus the leading triple (and always
+    the Q1+Q6+Q14 headline batch) — the same cross-query fusion products
+    ``PimDatabase.run_queries`` dispatches, so the verifier gates them
+    exactly like the single-query inventory."""
+    from repro.core import program as prog
+
+    specs = Q.all_queries()
+    by_rel: dict = {}
+    for spec in specs:
+        if spec.host is not None:
+            rels = {r for r, _, _ in E.split_query(spec)[0]}
+        else:
+            rels = set(spec.filters)
+        for r in rels:
+            by_rel.setdefault(r, []).append(spec)
+
+    combos: List[Tuple[str, tuple]] = []
+    for r, members in sorted(by_rel.items()):
+        for i in range(len(members) - 1):
+            combos.append((r, tuple(members[i:i + 2])))
+        if len(members) >= 3:
+            combos.append((r, tuple(members[:3])))
+    combos.append(("lineitem", tuple(Q.get_query(n)
+                                     for n in ("Q1", "Q6", "Q14"))))
+
+    programs: List[Program] = []
+    seen = set()
+    for r, combo in combos:
+        names = tuple(s.name for s in combo)
+        if (r, names) in seen:
+            continue
+        seen.add((r, names))
+        _, rel_programs = db._compile_batch(list(combo))
+        if len(rel_programs.get(r, ())) < 2:
+            continue
+        lp = prog.link_programs(rel_programs[r], relation=db.relations[r])
+        programs.append((f"linked/{'+'.join(names)}/{r}",
+                         db.relations[r], lp.instrs, lp.mask_outputs))
+    return programs
+
+
 def lint(sf: float = 0.002, strict: bool = False,
          verbose: bool = False) -> int:
     t0 = time.perf_counter()
     db = PimDatabase(tpch.generate(sf=sf, seed=0))
-    programs = collect_programs(db)
+    programs = collect_programs(db) + collect_linked_programs(db)
 
     totals = {"error": 0, "warning": 0, "info": 0}
     n_checked = 0

@@ -42,6 +42,17 @@ so it is lowered once and wrapped with ``shard_map``
 Everything above is ONE logical dispatch per relation program: the
 ``jax.jit(shard_map(...))``-compiled executable.
 
+Multi-query linked programs (``core.program.link_programs``) ride the
+same wrapper with no distribution-specific handling: output masks stay
+``P(shard_axes)`` regardless of how many queries contributed them, each
+query's Materialize output keeps its own per-shard counts for the
+host-side prefix stitch, and reduce partials psum per *job* — jobs
+already batch across queries when linking lets their ReduceSums share a
+source stack. A batch of N queries over one relation is therefore still
+exactly one broadcast request to every module, now carrying N queries'
+worth of outputs; per-query demultiplexing (``query_slots``) happens on
+the host after the collective.
+
 Harness API
 -----------
 ``PimDatabase(tables, mesh=mesh, shard_axes=("pod", "data"))`` shards

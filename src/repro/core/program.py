@@ -641,6 +641,154 @@ def frees_by_instr(n_instrs: int, last_use: Mapping[str, int],
 
 
 # --------------------------------------------------------------------------
+# Cross-query linking: many programs over one relation -> one SSA program
+# --------------------------------------------------------------------------
+# Operand field names per instruction kind (the register-valued fields a
+# linker must rename); every other dataclass field is static and becomes
+# part of the value-numbering key unchanged.
+_OPERAND_FIELDS: Dict[str, Tuple[str, ...]] = {
+    "EqualImm": ("attr",), "NotEqualImm": ("attr",),
+    "LessThanImm": ("attr",), "GreaterThanImm": ("attr",),
+    "AddImm": ("attr",),
+    "Equal": ("attr_a", "attr_b"), "LessThan": ("attr_a", "attr_b"),
+    "Add": ("attr_a", "attr_b"), "Subtract": ("attr_a", "attr_b"),
+    "Multiply": ("attr_a", "attr_b"),
+    "BitwiseAnd": ("src_a", "src_b"), "BitwiseOr": ("src_a", "src_b"),
+    "BitwiseNot": ("src",),
+    "SetReset": (),
+    "ReduceSum": ("attr", "mask"), "ReduceMinMax": ("attr", "mask"),
+    "Materialize": ("mask",),            # plus the attrs tuple, special-cased
+    "ColumnTransform": ("mask",),
+}
+# Kinds whose operand order is semantically irrelevant — their value key
+# sorts the operand pair so ``And(a, b)`` dedups against ``And(b, a)``.
+# Multiply is NOT here: its value is symmetric but its Table-4 cycle
+# count (24nm - 19n + 2m - 1) is not, so only exact-form matches dedup.
+# LessThan/Subtract are order-sensitive in value and excluded too.
+_COMMUTATIVE_KINDS = frozenset(
+    {"BitwiseAnd", "BitwiseOr", "Equal", "Add"})
+
+
+def _linked_key(ins: isa.PimInstruction, rename: Mapping[str, str]) -> tuple:
+    """Value-numbering key of one instruction under a register renaming:
+    (kind, linked operand names, static fields). Two instructions with
+    equal keys compute the same value in the linked program."""
+    def rn(v: str) -> str:
+        return rename.get(v, v)
+
+    kind = ins.kind
+    op_fields = _OPERAND_FIELDS[kind]
+    ops: tuple = tuple(rn(getattr(ins, f)) for f in op_fields)
+    if kind == "Materialize":
+        ops = (tuple(rn(a) for a in ins.attrs),) + ops
+    elif kind in _COMMUTATIVE_KINDS:
+        ops = tuple(sorted(ops))
+    skip = set(op_fields) | {"dest", "attrs"}
+    static = tuple((f.name, getattr(ins, f.name))
+                   for f in dataclasses.fields(ins) if f.name not in skip)
+    return (kind, ops, static)
+
+
+def _relink_instr(ins: isa.PimInstruction, rename: Mapping[str, str],
+                  dest: str) -> isa.PimInstruction:
+    """Rebuild one instruction with renamed operands and a new dest."""
+    def rn(v: str) -> str:
+        return rename.get(v, v)
+
+    kw: Dict[str, object] = {f: rn(getattr(ins, f))
+                             for f in _OPERAND_FIELDS[ins.kind]}
+    if ins.kind == "Materialize":
+        kw["attrs"] = tuple(rn(a) for a in ins.attrs)
+    return dataclasses.replace(ins, dest=dest, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySlot:
+    """Output wiring of ONE source program inside a linked program.
+
+    ``reg_map`` maps every register the source program defined to the
+    register that computes the same value in the linked program (shared
+    subexpressions of several queries map to one linked register);
+    ``mask_outputs`` are the source program's requested mask outputs,
+    already translated. ``ProgramResult.query`` uses a slot to demux
+    masks/scalars/materialized rows back to the originating query.
+    """
+    reg_map: Mapping[str, str]
+    mask_outputs: Tuple[str, ...]
+
+    def reg(self, name: str) -> str:
+        return self.reg_map.get(name, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkedProgram:
+    """Result of :func:`link_programs`: one SSA program + per-query slots."""
+    instrs: Tuple[isa.PimInstruction, ...]
+    mask_outputs: Tuple[str, ...]        # union of all slots', deduped
+    slots: Tuple[QuerySlot, ...]
+    n_instrs_unlinked: int               # sum of member program lengths
+    n_deduped: int                       # instructions removed by CSE
+
+
+def link_programs(programs: Sequence[Tuple[Sequence[isa.PimInstruction],
+                                           Sequence[str]]],
+                  relation: Optional[eng.PimRelation] = None
+                  ) -> LinkedProgram:
+    """Merge several compiled instruction streams over ONE relation into
+    a single SSA program fit for one fused dispatch.
+
+    ``programs`` is a sequence of ``(instrs, mask_outputs)`` pairs, one
+    per query, in batch order. Instructions are value-numbered as they
+    are appended: an instruction whose (kind, linked operands, static
+    fields) key was already emitted — by this query or an earlier one —
+    is dropped, and its dest aliases the existing register. Predicate
+    canonicalization (``db.compiler.canonicalize``) makes structurally
+    equal subtrees arrive here in identical instruction form, so the
+    shared-subexpression dedup is exact, not heuristic. Colliding dest
+    names (un-namespaced compilers both emitting ``t0``) are uniquified
+    with a ``q<i>.`` prefix; pass ``relation`` so renames also avoid its
+    attribute names. The output stays single-assignment, which keeps
+    ``plan_reduces`` grouping and ``plan_arith`` batching enabled — one
+    query's aggregates stack as extra groups in another's popcount jobs,
+    and independent per-query arith chains join one CSA batch.
+    """
+    reserved = {"__valid__"}
+    if relation is not None:
+        reserved.update(relation.planes)
+    value_table: Dict[tuple, str] = {}
+    linked: List[isa.PimInstruction] = []
+    used: set = set()
+    slots: List[QuerySlot] = []
+    total = deduped = 0
+    for qi, (instrs, mouts) in enumerate(programs):
+        rename: Dict[str, str] = {}
+        for ins in instrs:
+            total += 1
+            key = _linked_key(ins, rename)
+            hit = value_table.get(key)
+            if hit is not None:
+                rename[ins.dest] = hit
+                deduped += 1
+                continue
+            dest = ins.dest
+            if dest in used or dest in reserved:
+                dest = f"q{qi}.{ins.dest}"
+                while dest in used or dest in reserved:
+                    dest = "_" + dest
+            linked.append(_relink_instr(ins, rename, dest))
+            used.add(dest)
+            rename[ins.dest] = dest
+            value_table[key] = dest
+        slots.append(QuerySlot(reg_map=dict(rename),
+                               mask_outputs=tuple(rename.get(m, m)
+                                                  for m in mouts)))
+    mask_outputs = tuple(dict.fromkeys(
+        m for s in slots for m in s.mask_outputs))
+    return LinkedProgram(tuple(linked), mask_outputs, tuple(slots),
+                         total, deduped)
+
+
+# --------------------------------------------------------------------------
 # compile_program / run_program
 # --------------------------------------------------------------------------
 class LruFnCache:
@@ -733,6 +881,12 @@ class CompiledProgram:
     # Materialize dest -> the attribute tuple it decodes (readout order).
     mat_attrs: Mapping[str, Tuple[str, ...]] = \
         dataclasses.field(default_factory=dict)
+    # Per-query output wiring when this is a linked multi-query program
+    # (empty for a plain single-query compile).
+    query_slots: Tuple[QuerySlot, ...] = ()
+    # Source attribute -> bit-planes it contributes to the streamed stack.
+    source_plane_counts: Mapping[str, int] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def n_dispatches(self) -> int:
@@ -740,9 +894,25 @@ class CompiledProgram:
         return 1
 
     @property
+    def n_queries(self) -> int:
+        return max(1, len(self.query_slots))
+
+    @property
     def agg_plane_reads(self) -> int:
         """Aggregate-plane tile reads per pass under the grouped plan."""
         return self.plan.plane_reads
+
+    @property
+    def source_plane_reads(self) -> int:
+        """Source bit-planes streamed per dispatch — each touched attribute
+        plane is read once no matter how many linked queries consume it
+        (the cross-query amortization headline)."""
+        return sum(self.source_plane_counts.values())
+
+    @property
+    def total_plane_reads(self) -> int:
+        """Source planes streamed + aggregate-plane re-reads per dispatch."""
+        return self.source_plane_reads + self.plan.plane_reads
 
     @property
     def agg_plane_reads_ungrouped(self) -> int:
@@ -846,6 +1016,42 @@ class ProgramResult:
         attrs = self._cp.mat_attrs[name]
         return {a: dense[i] for i, a in enumerate(attrs)}
 
+    def query(self, q: int) -> "QueryView":
+        """Demux view for source query ``q`` of a linked program: the
+        same mask/scalar/materialized accessors, addressed by the
+        query's OWN register names (translated through its slot)."""
+        return QueryView(self, self._cp.query_slots[q])
+
+
+class QueryView:
+    """Per-query window onto a linked-program :class:`ProgramResult`."""
+
+    def __init__(self, res: ProgramResult, slot: QuerySlot):
+        self._res = res
+        self._slot = slot
+
+    @property
+    def mask_outputs(self) -> Tuple[str, ...]:
+        return self._slot.mask_outputs
+
+    def reg(self, name: str) -> str:
+        return self._slot.reg(name)
+
+    def mask_packed(self, name: str) -> np.ndarray:
+        return self._res.mask_packed(self.reg(name))
+
+    def mask(self, name: str, n_records: Optional[int] = None) -> np.ndarray:
+        return self._res.mask(self.reg(name), n_records)
+
+    def scalar(self, name: str) -> Optional[int]:
+        return self._res.scalar(self.reg(name))
+
+    def materialized_count(self, name: str) -> int:
+        return self._res.materialized_count(self.reg(name))
+
+    def materialized(self, name: str) -> Dict[str, np.ndarray]:
+        return self._res.materialized(self.reg(name))
+
 
 def compile_program(relation: eng.PimRelation,
                     program: Sequence[isa.PimInstruction],
@@ -853,7 +1059,8 @@ def compile_program(relation: eng.PimRelation,
                     backend: str = "jnp",
                     interpret: Optional[bool] = None,
                     mesh: Optional[Mesh] = None,
-                    shard_axes: Optional[Sequence[str]] = None
+                    shard_axes: Optional[Sequence[str]] = None,
+                    query_slots: Sequence[QuerySlot] = ()
                     ) -> CompiledProgram:
     """Lower a whole relation program into a single jit-compiled function.
 
@@ -861,6 +1068,11 @@ def compile_program(relation: eng.PimRelation,
     reduce destination automatically becomes a scalar output. Liveness
     analysis drops dead registers during tracing so XLA sees the true
     (smaller) live-plane working set.
+
+    ``query_slots`` (from ``link_programs``) is demux metadata for linked
+    multi-query programs; it does not affect the executable, so it is not
+    part of the cache signature — recurring batches hit the ``LruFnCache``
+    on the canonical linked instruction stream alone.
 
     With ``mesh`` the compiled function is wrapped in ``shard_map`` over
     ``shard_axes`` (default: every mesh axis): bit-planes shard along the
@@ -930,7 +1142,9 @@ def compile_program(relation: eng.PimRelation,
     return CompiledProgram(instrs, mask_outputs, scalar_kinds, analysis,
                            plan, arith, backend, relation.layout.n_words, fn,
                            mesh=mesh, shard_axes=shard_axes,
-                           mat_attrs=mat_attrs)
+                           mat_attrs=mat_attrs,
+                           query_slots=tuple(query_slots),
+                           source_plane_counts=dict(widths))
 
 
 def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult:

@@ -6,10 +6,21 @@ instruction sequence a PIM controller executes. Immediates stay immediates
 (Algorithm 1), attribute widths come from the layout, derived values get
 fresh computation-area registers, and every filter program ends with the
 column-transform that re-orients the result bits for dense readout.
+
+Predicates are *canonicalized* before compilation (:func:`canonicalize`):
+commutative ``And``/``Or`` children are flattened, deduplicated and
+sorted by structural key, ``Cmp`` direction is normalized (``gt``/``ge``
+become swapped ``lt``/``le``), ``Between`` folds into its ``And(ge, le)``
+form, and ``InSet`` value lists are sorted sets. Structurally-equal
+subtrees therefore share one :func:`struct_key` (and one
+:func:`canonical_hash`) — the compiler reuses the mask register of any
+subtree it already compiled, and ``core.program.link_programs`` relies on
+the same canonical forms to dedup subexpressions *across* queries.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -102,17 +113,127 @@ class Agg:
 
 
 # --------------------------------------------------------------------------
+# Structural canonical form
+# --------------------------------------------------------------------------
+# Direction-normalizing swaps: gt/ge become lt/le with operands exchanged
+# (the imm path already compiles both directions to the same comparator;
+# canonicalizing the AST makes the *keys* equal too).
+_CMP_SWAP = {"gt": "lt", "ge": "le"}
+
+
+def _skey(node) -> tuple:
+    """Nested-tuple structural identity of an AST node (order-preserving
+    for non-commutative operators — Mul/AddE operand order is cost-model
+    relevant, the Multiply cycle formula is asymmetric in (n, m))."""
+    if isinstance(node, Col):
+        return ("Col", node.name)
+    if isinstance(node, Lit):
+        return ("Lit", int(node.value))
+    if isinstance(node, Cmp):
+        return ("Cmp", node.op, _skey(node.left), _skey(node.right))
+    if isinstance(node, Between):
+        return ("Between", _skey(node.col), int(node.lo), int(node.hi))
+    if isinstance(node, InSet):
+        return ("InSet", _skey(node.col), tuple(sorted(node.values)))
+    if isinstance(node, Not):
+        return ("Not", _skey(node.p))
+    if isinstance(node, (And, Or)):
+        return (type(node).__name__,) + tuple(_skey(q) for q in node.ps)
+    if isinstance(node, (Mul, AddE)):
+        return (type(node).__name__, _skey(node.a), _skey(node.b))
+    if isinstance(node, RSubImm):
+        return ("RSubImm", int(node.imm), _skey(node.e))
+    raise TypeError(node)
+
+
+def struct_key(node) -> str:
+    """Stable, totally-ordered structural key of a predicate/expression.
+
+    A string (not Python ``hash()``, which is per-process randomized for
+    strings) so it can both sort commutative children deterministically
+    and identify structurally-equal subtrees across independently
+    compiled queries.
+    """
+    return repr(_skey(node))
+
+
+def canonical_hash(node) -> str:
+    """Short stable digest of :func:`struct_key` (for labels/signatures)."""
+    return hashlib.sha256(struct_key(node).encode()).hexdigest()[:16]
+
+
+def canonicalize(p: "Pred") -> "Pred":
+    """Rewrite a predicate into its structural canonical form.
+
+    Equal-meaning trees become equal-keyed trees: ``And``/``Or`` nests
+    flatten, children dedup and sort by :func:`struct_key`; ``gt``/``ge``
+    comparisons between expressions become swapped ``lt``/``le``;
+    ``eq``/``ne`` operand pairs sort; ``Between`` folds to ``And(ge, le)``
+    (it compiles to the identical instruction triple); ``InSet`` values
+    become a sorted set; double negation cancels. Expression operand
+    order is deliberately preserved (see :func:`_skey`), so the
+    instruction *multiset* — and with it every Table-4 cycle count — is
+    unchanged by canonicalization; only emission order moves.
+    """
+    if isinstance(p, Cmp):
+        left = p.left
+        right = p.right
+        op = p.op
+        if not isinstance(right, Lit):
+            if op in _CMP_SWAP:
+                op = _CMP_SWAP[op]
+                left, right = right, left
+            elif op in ("eq", "ne") and struct_key(right) < struct_key(left):
+                left, right = right, left
+        return Cmp(op, left, right) if (op, left, right) != \
+            (p.op, p.left, p.right) else p
+    if isinstance(p, Between):
+        return And(Cmp("ge", p.col, Lit(p.lo)),
+                   Cmp("le", p.col, Lit(p.hi)))
+    if isinstance(p, InSet):
+        vals = tuple(sorted(set(p.values)))
+        return p if vals == p.values else InSet(p.col, vals)
+    if isinstance(p, Not):
+        q = canonicalize(p.p)
+        if isinstance(q, Not):
+            return q.p
+        return p if q is p.p else Not(q)
+    if isinstance(p, (And, Or)):
+        cls = type(p)
+        flat: List[Pred] = []
+        for q in p.ps:
+            cq = canonicalize(q)
+            flat.extend(cq.ps if isinstance(cq, cls) else (cq,))
+        seen: Dict[str, Pred] = {}
+        for q in flat:
+            seen.setdefault(struct_key(q), q)
+        kids = [seen[k] for k in sorted(seen)]
+        if len(kids) == 1:
+            return kids[0]
+        return cls(*kids)
+    return p
+
+
+# --------------------------------------------------------------------------
 # Compiler
 # --------------------------------------------------------------------------
 class Compiler:
-    def __init__(self, relation: eng.PimRelation):
+    """``namespace`` prefixes every register this compiler allocates
+    (``q0.t0``, ``q0.m1``, …): two programs compiled over the same
+    relation no longer collide on ``t0``/``m0`` when concatenated or
+    linked (``core.program.link_programs`` additionally uniquifies as a
+    backstop)."""
+
+    def __init__(self, relation: eng.PimRelation, namespace: str = ""):
         self.rel = relation
+        self.namespace = namespace
         self._ids = itertools.count()
         self.program: List[isa.PimInstruction] = []
         self._expr_cache: Dict[Expr, Tuple[str, int]] = {}
+        self._pred_cache: Dict[str, str] = {}
 
     def fresh(self, prefix: str) -> str:
-        return f"{prefix}{next(self._ids)}"
+        return f"{self.namespace}{prefix}{next(self._ids)}"
 
     # -- expressions --------------------------------------------------------
     def compile_expr(self, e: Expr) -> Tuple[str, int]:
@@ -165,20 +286,26 @@ class Compiler:
 
     # -- predicates ----------------------------------------------------------
     def compile_pred(self, p: Pred) -> str:
-        """Returns the mask register holding the predicate result."""
+        """Returns the mask register holding the predicate result.
+
+        The predicate is canonicalized first, and every compiled subtree
+        is cached under its structural key — a structurally-equal subtree
+        appearing again anywhere in this compiler's program (another
+        conjunct, a group predicate, a later ``compile_filter``) reuses
+        the existing mask register instead of recomputing it.
+        """
+        p = canonicalize(p)
+        key = struct_key(p)
+        cached = self._pred_cache.get(key)
+        if cached is not None:
+            return cached
+        reg = self._compile_pred_node(p)
+        self._pred_cache[key] = reg
+        return reg
+
+    def _compile_pred_node(self, p: Pred) -> str:
         if isinstance(p, Cmp):
             return self._compile_cmp(p)
-        if isinstance(p, Between):
-            a, w = self.compile_expr(p.col)
-            m_lo = self.fresh("m")
-            self.program.append(isa.GreaterThanImm(
-                dest=m_lo, attr=a, imm=p.lo, n_bits=w, or_equal=True))
-            m_hi = self.fresh("m")
-            self.program.append(isa.LessThanImm(
-                dest=m_hi, attr=a, imm=p.hi, n_bits=w, or_equal=True))
-            m = self.fresh("m")
-            self.program.append(isa.BitwiseAnd(dest=m, src_a=m_lo, src_b=m_hi))
-            return m
         if isinstance(p, InSet):
             if not p.values:
                 # Empty IN-list: constant-false mask (previously returned

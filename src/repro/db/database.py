@@ -57,6 +57,26 @@ class QueryRun:
     wall_time_s: float
 
 
+@dataclasses.dataclass
+class _BatchRelation:
+    """One (query, relation) program's wiring inside a linked batch."""
+    rel_name: str
+    pred: object                            # None for scan-all stages
+    compiler: Compiler
+    mask_reg: str
+    group_regs: List[Tuple[str, Dict]]
+    mat_reg: Optional[str]
+    slot: int                               # index into the relation's slots
+
+
+@dataclasses.dataclass
+class _BatchQuery:
+    """Per-query compile product of ``PimDatabase._compile_batch``."""
+    spec: Q.QuerySpec
+    host: Optional[object]                  # E.HostStage when end-to-end
+    rels: List[_BatchRelation]
+
+
 class PimDatabase:
     """``mesh``: a ``jax.sharding.Mesh`` — every PIM-resident relation is
     sharded along the record/word axis over ``shard_axes`` (default: all
@@ -73,6 +93,9 @@ class PimDatabase:
             self.shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
         else:
             self.shard_axes = None
+        # Counters of the most recent run_queries() batch (dispatches,
+        # plane reads, link dedup, walls) — None until a batch has run.
+        self.last_batch_stats: Optional[Dict[str, object]] = None
         self.relations: Dict[str, eng.PimRelation] = {}
         for name, cols in tables.items():
             if S.SCHEMA[name].in_pim:
@@ -84,11 +107,12 @@ class PimDatabase:
 
     # -- PIM execution ------------------------------------------------------
     def _compile_relation(self, rel: eng.PimRelation, spec: Q.QuerySpec,
-                          pred) -> Tuple[Compiler, str, List[Tuple[str, Dict]]]:
+                          pred, namespace: str = ""
+                          ) -> Tuple[Compiler, str, List[Tuple[str, Dict]]]:
         """Compile the FULL program for one relation: filter, group masks,
         aggregates. Returns (compiler, filter mask register,
         [(group label, {agg name: (kind, reg)})])."""
-        c = Compiler(rel)
+        c = Compiler(rel, namespace=namespace)
         is_agg_rel = (spec.kind == "full" and rel.name == spec.agg_relation)
         mask_reg = c.compile_filter(pred, with_transform=not is_agg_rel)
         group_regs: List[Tuple[str, Dict]] = []
@@ -234,6 +258,154 @@ class PimDatabase:
                                                      self.tables))
         host_s = time.perf_counter() - t0
         return QueryResult.from_table(spec, table, pim_s, host_s, mat_rows)
+
+    # -- batched execution (cross-query fusion) ------------------------------
+    def _compile_batch(self, specs) -> Tuple[
+            List[_BatchQuery], Dict[str, List[Tuple[tuple, tuple]]]]:
+        """Compile every spec's per-relation program — each under its own
+        ``q<i>.`` register namespace — and group the programs by relation
+        for linking. Returns (per-query wiring, {relation: [(instrs,
+        mask_outputs)] in slot order})."""
+        works: List[_BatchQuery] = []
+        rel_programs: Dict[str, List[Tuple[tuple, tuple]]] = {}
+        for qi, spec in enumerate(specs):
+            ns = f"q{qi}."
+            rels: List[_BatchRelation] = []
+            if spec.host is not None:
+                pim_stage, host = E.split_query(spec)
+                for rel_name, pred, cols in pim_stage:
+                    rel = self.relations[rel_name]
+                    c = Compiler(rel, namespace=ns)
+                    mask_reg = (c.compile_filter(pred, with_transform=False)
+                                if pred is not None else c.compile_scan_all())
+                    mat_reg = c.compile_materialize(mask_reg, cols)
+                    progs = rel_programs.setdefault(rel_name, [])
+                    rels.append(_BatchRelation(rel_name, pred, c, mask_reg,
+                                               [], mat_reg, len(progs)))
+                    progs.append((tuple(c.program), ()))
+                works.append(_BatchQuery(spec, host, rels))
+            else:
+                for rel_name, pred in spec.filters.items():
+                    rel = self.relations[rel_name]
+                    c, mask_reg, group_regs = self._compile_relation(
+                        rel, spec, pred, namespace=ns)
+                    progs = rel_programs.setdefault(rel_name, [])
+                    rels.append(_BatchRelation(rel_name, pred, c, mask_reg,
+                                               group_regs, None, len(progs)))
+                    progs.append((tuple(c.program), (mask_reg,)))
+                works.append(_BatchQuery(spec, None, rels))
+        return works, rel_programs
+
+    def run_queries(self, specs, fused: bool = True) -> List[object]:
+        """Execute a BATCH of queries with cross-query fusion: specs are
+        compiled independently (canonicalized, namespaced), grouped by
+        relation, linked into ONE SSA program per relation
+        (``core.program.link_programs`` dedups shared subexpressions),
+        and dispatched ONCE per relation — N queries over ``lineitem``
+        stream its bit-planes once, not N times. Per-query outputs are
+        demuxed through the linked program's ``query_slots``.
+
+        Returns one result per spec, batch order, matching the
+        sequential API: ``QueryResult`` for end-to-end specs (host
+        stage), ``QueryRun`` for mask/aggregate specs. Every value is
+        bit-identical to the sequential ``run_query``/``run_pim`` result.
+        ``fused=False`` is the sequential oracle fallback.
+
+        Linking is deterministic, so a recurring batch produces the same
+        linked instruction stream and hits the compiled-executable
+        ``LruFnCache``. Batch-level counters (dispatches, plane reads,
+        dedup, walls) land in ``self.last_batch_stats``.
+        """
+        if not fused:
+            return [self.run_query(s) if s.host is not None
+                    else self.run_pim(s, fused=False) for s in specs]
+        t_all = time.perf_counter()
+        works, rel_programs = self._compile_batch(specs)
+
+        compiled: Dict[str, prog.CompiledProgram] = {}
+        results: Dict[str, prog.ProgramResult] = {}
+        linked: Dict[str, prog.LinkedProgram] = {}
+        pim_wall: Dict[str, float] = {}
+        for rel_name, programs in rel_programs.items():
+            rel = self.relations[rel_name]
+            lp = prog.link_programs(programs, relation=rel)
+            cp = prog.compile_program(
+                rel, lp.instrs, mask_outputs=lp.mask_outputs,
+                backend=self.backend, mesh=self.mesh,
+                shard_axes=self.shard_axes, query_slots=lp.slots)
+            t0 = time.perf_counter()
+            res = prog.run_program(cp, rel)
+            pim_wall[rel_name] = time.perf_counter() - t0
+            compiled[rel_name], results[rel_name] = cp, res
+            linked[rel_name] = lp
+
+        # Attribute each relation's single dispatch evenly to the queries
+        # that share it (the point of fusion: the dispatch is shared).
+        n_users: Dict[str, int] = {}
+        for w in works:
+            for br in w.rels:
+                n_users[br.rel_name] = n_users.get(br.rel_name, 0) + 1
+        share = {r: pim_wall[r] / n_users[r] for r in pim_wall}
+
+        out: List[object] = []
+        demux_s = 0.0
+        for w in works:
+            t0 = time.perf_counter()
+            if w.host is not None:
+                materialized: Dict[str, E.HostTable] = {}
+                mat_rows: Dict[str, int] = {}
+                pim_s = 0.0
+                for br in w.rels:
+                    view = results[br.rel_name].query(br.slot)
+                    vals = view.materialized(br.mat_reg)
+                    materialized[br.rel_name] = E.HostTable(
+                        {a: np.asarray(v, np.int64)
+                         for a, v in vals.items()})
+                    mat_rows[br.rel_name] = materialized[br.rel_name].n_rows
+                    pim_s += share[br.rel_name]
+                table = E.run_host_stage(
+                    w.host, E.ExecContext(materialized, self.tables))
+                host_s = time.perf_counter() - t0
+                out.append(QueryResult.from_table(
+                    w.spec, table, pim_s, host_s, mat_rows))
+            else:
+                rel_runs: Dict[str, RelationRun] = {}
+                aggs: Dict[str, Dict[str, object]] = {}
+                wall = 0.0
+                for br in w.rels:
+                    view = results[br.rel_name].query(br.slot)
+                    mask = view.mask(br.mask_reg)
+                    if br.group_regs:
+                        aggs.update(self._finalize_aggs(
+                            br.group_regs, view.scalar, view.scalar))
+                    rel = self.relations[br.rel_name]
+                    rel_runs[br.rel_name] = self._relation_run(
+                        rel, br.rel_name, w.spec, br.pred, mask,
+                        list(br.compiler.program),
+                        cp=compiled[br.rel_name])
+                    wall += share[br.rel_name]
+                out.append(QueryRun(w.spec, rel_runs, aggs,
+                                    wall + time.perf_counter() - t0))
+            demux_s += time.perf_counter() - t0
+
+        self.last_batch_stats = {
+            "n_queries": len(works),
+            "n_dispatches": len(rel_programs),
+            "pim_s": sum(pim_wall.values()),
+            "demux_s": demux_s,
+            "wall_s": time.perf_counter() - t_all,
+            "relations": {
+                r: {"n_programs": len(rel_programs[r]),
+                    "instrs_unlinked": linked[r].n_instrs_unlinked,
+                    "instrs_linked": len(linked[r].instrs),
+                    "instrs_deduped": linked[r].n_deduped,
+                    "plane_reads": compiled[r].total_plane_reads,
+                    "agg_plane_reads": compiled[r].agg_plane_reads,
+                    "source_plane_reads": compiled[r].source_plane_reads,
+                    "pim_s": pim_wall[r]}
+                for r in rel_programs},
+        }
+        return out
 
     # -- baseline (numpy scan oracle) ----------------------------------------
     def run_baseline(self, spec: Q.QuerySpec) -> QueryRun:

@@ -42,6 +42,17 @@ multiply's ungated partial-product stacks (Q1's widest: 8 x 39 planes per
 tile) before compression collapses them; Mosaic is free to schedule the
 3:2 levels eagerly, keeping the peak well under the ~2x headroom left.
 
+Cross-query fusion (``core.program.link_programs``) feeds this kernel
+*linked* multi-query programs unchanged: the kernel is agnostic to how
+many queries produced the DAG — output masks are a list (one VMEM block
+per mask, any count), every Materialize output compacts against its own
+mask, and grouped reduce jobs batch across whatever ReduceSums share a
+source stack, whichever query emitted them. The per-query wiring lives
+entirely outside the kernel in ``CompiledProgram.query_slots``; what the
+kernel gains from linking is purely workload-shaped: each *shared*
+source plane is staged into VMEM once per tile for all queries, and
+CSE-deduped instructions simply never reach the op sequence.
+
 Distributed execution (``core.distributed.shard_program_fn``) wraps the
 whole program function — this kernel included — in ``shard_map``: the
 kernel then sees only its shard's word slice (``W / n_shards``, still a

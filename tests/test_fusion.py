@@ -1,0 +1,272 @@
+"""Cross-query fusion: canonicalization, program linking, and
+``PimDatabase.run_queries`` batch parity vs the sequential per-query
+paths, on every backend including an 8-device mesh."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _mesh_subprocess import run_forced_multidevice
+
+from repro.analysis.passes import build_context, run_passes
+from repro.core import program as prog
+from repro.db import database, queries, tpch
+from repro.db.compiler import (And, Between, Cmp, Col, Compiler, InSet, Lit,
+                               Not, Or, canonical_hash, canonicalize,
+                               struct_key)
+
+# Same generator parameters as test_program.py / test_queries.py so the
+# compiled-executable cache is shared across modules. Lazy module-level
+# singletons (not fixtures): the @given property test below cannot take
+# fixtures — the hypothesis shim hides the wrapped signature from pytest.
+SF, SEED = 0.002, 123
+_CACHE: dict = {}
+
+
+def _get_db(backend: str = "jnp") -> database.PimDatabase:
+    if "tables" not in _CACHE:
+        _CACHE["tables"] = tpch.generate(sf=SF, seed=SEED)
+    if backend not in _CACHE:
+        _CACHE[backend] = database.PimDatabase(_CACHE["tables"],
+                                               backend=backend)
+    return _CACHE[backend]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return _get_db("jnp")
+
+
+@pytest.fixture(scope="module")
+def db_pallas():
+    return _get_db("pallas")
+
+
+# --------------------------------------------------------------------------
+# Canonicalization
+# --------------------------------------------------------------------------
+def test_canonicalize_sorts_commutative_children():
+    a = Cmp("lt", Col("l_quantity"), Lit(10))
+    b = Cmp("ge", Col("l_discount"), Lit(3))
+    assert struct_key(canonicalize(And(a, b))) == \
+        struct_key(canonicalize(And(b, a)))
+    assert canonical_hash(canonicalize(Or(a, b))) == \
+        canonical_hash(canonicalize(Or(b, a)))
+    # Nested same-op trees flatten before sorting, duplicates collapse.
+    c = Cmp("le", Col("l_tax"), Lit(5))
+    assert struct_key(canonicalize(And(And(a, b), c))) == \
+        struct_key(canonicalize(And(c, And(b, a), a)))
+
+
+def test_canonicalize_between_and_cmp_direction():
+    col = Col("l_shipdate")
+    assert struct_key(canonicalize(Between(col, 10, 20))) == \
+        struct_key(canonicalize(And(Cmp("ge", col, Lit(10)),
+                                    Cmp("le", col, Lit(20)))))
+    # gt/ge between expressions normalize to swapped lt/le.
+    a, b = Col("l_quantity"), Col("l_discount")
+    assert struct_key(canonicalize(Cmp("gt", a, b))) == \
+        struct_key(canonicalize(Cmp("lt", b, a)))
+    assert struct_key(canonicalize(Cmp("eq", a, b))) == \
+        struct_key(canonicalize(Cmp("eq", b, a)))
+
+
+def test_canonicalize_inset_not_idempotent():
+    p = InSet(Col("p_size"), (9, 1, 5, 1))
+    c = canonicalize(p)
+    assert c.values == (1, 5, 9)
+    q = Not(Not(Cmp("lt", Col("l_quantity"), Lit(3))))
+    assert struct_key(canonicalize(q)) == \
+        struct_key(Cmp("lt", Col("l_quantity"), Lit(3)))
+    for node in (p, q, And(p, q)):
+        once = canonicalize(node)
+        assert struct_key(canonicalize(once)) == struct_key(once)
+
+
+def test_canonical_forms_compile_identically(db):
+    """Two equal-meaning predicate spellings produce instruction streams
+    that link with 100% dedup (the second program vanishes entirely)."""
+    rel = db.relations["lineitem"]
+    col = Col("l_shipdate")
+    forms = (And(Between(col, 100, 200), Cmp("lt", Col("l_quantity"), Lit(9))),
+             And(Cmp("lt", Col("l_quantity"), Lit(9)),
+                 And(Cmp("ge", col, Lit(100)), Cmp("le", col, Lit(200)))))
+    programs = []
+    for f in forms:
+        c = Compiler(rel)
+        m = c.compile_filter(f, with_transform=False)
+        programs.append((tuple(c.program), (m,)))
+    lp = prog.link_programs(programs, relation=rel)
+    assert lp.n_deduped == len(programs[1][0])
+    assert lp.slots[0].mask_outputs == lp.slots[1].mask_outputs
+
+
+# --------------------------------------------------------------------------
+# Register collision + linking (the latent-collision regression)
+# --------------------------------------------------------------------------
+def test_linking_uniquifies_colliding_registers(db):
+    """Two default (un-namespaced) compilers over one relation reuse the
+    same fresh names — concatenating their programs silently aliases
+    registers; link_programs must uniquify, keep the result SSA, and
+    pass the defuse verifier with zero errors."""
+    rel = db.relations["lineitem"]
+    s1, s6 = queries.get_query("Q1"), queries.get_query("Q6")
+    programs = []
+    for spec in (s1, s6):
+        c, m, _ = db._compile_relation(rel, spec, spec.filters["lineitem"])
+        programs.append((tuple(c.program), (m,)))
+    dests_a = {i.dest for i in programs[0][0]}
+    dests_b = {i.dest for i in programs[1][0]}
+    assert dests_a & dests_b, "expected colliding fresh names"
+
+    lp = prog.link_programs(programs, relation=rel)
+    dests = [i.dest for i in lp.instrs]
+    assert len(dests) == len(set(dests)), "linked program must stay SSA"
+    for backend in ("trace", "jnp", "pallas"):
+        ctx = build_context(rel, lp.instrs, lp.mask_outputs, backend=backend)
+        errs = [d for d in run_passes(ctx) if d.severity == "error"]
+        assert not errs, errs
+
+
+def test_namespaced_compilers_do_not_collide(db):
+    rel = db.relations["lineitem"]
+    spec = queries.get_query("Q6")
+    regs = set()
+    for ns in ("q0.", "q1."):
+        c, m, _ = db._compile_relation(rel, spec, spec.filters["lineitem"],
+                                       namespace=ns)
+        mine = {i.dest for i in c.program}
+        assert all(r.startswith(ns) for r in mine)
+        assert not (regs & mine)
+        regs |= mine
+
+
+# --------------------------------------------------------------------------
+# Batch parity: run_queries == sequential run_query / run_pim
+# --------------------------------------------------------------------------
+def _assert_batch_matches_sequential(dbx, specs):
+    batch = dbx.run_queries(specs)
+    for spec, got in zip(specs, batch):
+        if spec.host is not None:
+            want = dbx.run_query(spec)
+            assert got.columns == want.columns, spec.name
+            assert got.rows == want.rows, spec.name
+            assert got.materialized_rows == want.materialized_rows, spec.name
+        else:
+            want = dbx.run_pim(spec)
+            assert got.aggregates == want.aggregates, spec.name
+            for rel in spec.filters:
+                np.testing.assert_array_equal(
+                    got.relations[rel].mask, want.relations[rel].mask,
+                    err_msg=f"{spec.name}/{rel}")
+    return batch
+
+
+def test_q1_q6_q14_batch_all_paths(db, db_pallas):
+    """Acceptance: the headline Q1+Q6+Q14 batch — one dispatch for
+    lineitem, plane reads sublinear, results bit-identical to the
+    sequential paths AND the eager/numpy oracles, jnp and pallas."""
+    specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
+    batch = _assert_batch_matches_sequential(db, specs)
+    _assert_batch_matches_sequential(db_pallas, specs)
+
+    # Eager + numpy oracles for the two aggregate queries.
+    for i in (0, 1):
+        eager = db.run_pim(specs[i], fused=False)
+        base = db.run_baseline(specs[i])
+        assert batch[i].aggregates == eager.aggregates
+        assert batch[i].aggregates == base.aggregates
+
+    stats = db.last_batch_stats
+    assert stats["n_queries"] == 3
+    # ONE logical dispatch per touched relation: lineitem + part, not 4.
+    assert stats["n_dispatches"] == 2
+    assert stats["relations"]["lineitem"]["n_programs"] == 3
+    assert stats["relations"]["lineitem"]["instrs_deduped"] > 0
+
+    # Plane-read sublinearity: batch < sum of singles, <= 1.6x costliest.
+    singles = []
+    for spec in specs:
+        seq = db.run_queries([spec])
+        singles.append(
+            db.last_batch_stats["relations"]["lineitem"]["plane_reads"])
+        del seq
+    batch3 = db.run_queries(specs)
+    reads = db.last_batch_stats["relations"]["lineitem"]["plane_reads"]
+    assert reads < sum(singles)
+    assert reads <= 1.6 * max(singles)
+    del batch3
+
+
+def test_batch_with_empty_avg_group(db):
+    """None-avg demux: an empty group's avg stays None through the
+    linked-batch path exactly as in the sequential path."""
+    from repro.db.compiler import Agg
+    spec = queries.QuerySpec(
+        "Qempty", "full",
+        filters={"customer": Cmp("gt", Col("c_acctbal"), Lit(1 << 40))},
+        agg_relation="customer",
+        aggregates=[Agg("avg", Col("c_acctbal"), "a"),
+                    Agg("min", Col("c_acctbal"), "mn"),
+                    Agg("count", None, "c")])
+    batch = db.run_queries([spec, queries.get_query("Q6")])
+    assert batch[0].aggregates["all"] == {"a": None, "mn": None, "c": 0}
+    assert batch[0].aggregates == db.run_pim(spec).aggregates
+
+
+def test_recurring_batch_hits_fn_cache(db):
+    """Same batch again -> identical canonical linked programs -> the
+    compiled-executable LRU serves every relation without a rebuild."""
+    specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
+    db.run_queries(specs)
+    h0, m0 = prog._FN_CACHE.hits, prog._FN_CACHE.misses
+    db.run_queries(specs)
+    assert prog._FN_CACHE.misses == m0
+    assert prog._FN_CACHE.hits >= h0 + db.last_batch_stats["n_dispatches"]
+
+
+_ALL = [q.name for q in queries.all_queries()]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, (1 << len(_ALL)) - 1), st.booleans())
+def test_fusion_parity_random_subsets(subset_bits, use_pallas):
+    """Property: for ANY subset of the 19 runnable TPC-H queries,
+    run_queries(batch) == the per-query sequential results — rows,
+    aggregates, masks — on both jnp and pallas."""
+    specs = [queries.get_query(n) for i, n in enumerate(_ALL)
+             if subset_bits >> i & 1]
+    # Bound the per-example cost: at most 4 queries per drawn batch.
+    specs = specs[:4]
+    _assert_batch_matches_sequential(
+        _get_db("pallas" if use_pallas else "jnp"), specs)
+
+
+def test_fusion_parity_distributed_mesh():
+    """8-device ("pod","data") mesh: the linked batch dispatches once per
+    relation through shard_map and demuxes per-query results that match
+    the single-device sequential path bit-for-bit."""
+    run_forced_multidevice("""
+        import numpy as np, jax
+        from repro.db import database, queries, tpch
+
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        tables = tpch.generate(sf=0.002, seed=123)
+        db1 = database.PimDatabase(tables)
+        dbm = database.PimDatabase(tables, mesh=mesh)
+
+        specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14", "Q19")]
+        batch = dbm.run_queries(specs)
+        assert dbm.last_batch_stats["n_dispatches"] == 2  # lineitem + part
+        for spec, got in zip(specs, batch):
+            if spec.host is not None:
+                want = db1.run_query(spec)
+                assert got.rows == want.rows, spec.name
+            else:
+                want = db1.run_pim(spec)
+                assert got.aggregates == want.aggregates, spec.name
+                for rel in spec.filters:
+                    np.testing.assert_array_equal(
+                        got.relations[rel].mask, want.relations[rel].mask,
+                        err_msg=f"{spec.name}/{rel}")
+        print("mesh batch parity OK")
+    """, devices=8)
