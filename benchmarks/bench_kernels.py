@@ -14,7 +14,12 @@ subsystem on TPC-H Q3/Q14 (PIM filter + materialize dispatch vs host
 join/agg/order wall split, with the materialized-row count as a gated
 counter), and cross-query fusion on the Q1+Q6+Q14 batch
 (``q1_q6_q14_concurrent``: one linked dispatch per relation, plane reads
-and warm wall sublinear in the number of simultaneous queries).
+and warm wall sublinear in the number of simultaneous queries), plus the
+async serving frontend (``serve_concurrent``: a 32-request trace at
+concurrency 8 through ``repro.serve.QueryService`` — admission-window
+linking, in-flight coalescing, and the version-keyed result cache must
+deliver >= 2x the queries/sec of a sequential ``db.execute`` loop, at
+bit-parity, with p50/p99 and plane reads reported).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -171,18 +176,19 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
     rows.extend(bench_distributed_program(db, spec))
     rows.extend(bench_verify(db))
     rows.extend(bench_concurrent(db))
+    rows.extend(bench_serve(db))
     return rows
 
 
 def bench_concurrent(db) -> List[dict]:
     """Cross-query fusion headline: Q1+Q6+Q14 submitted as ONE batch.
-    ``run_queries`` canonicalizes, links, and dispatches one fused program
-    per touched relation (lineitem + part = 2 dispatches, vs 4 running the
-    three queries back to back), streaming each shared source plane once.
-    The row gates the dispatch count, the linked lineitem plane-read
-    total, and the sublinearity ratio (batch reads / costliest single,
-    x1000 so the count gate stays integral); ``exact`` asserts bit-parity
-    with the sequential per-query paths AND ratio <= 1.6."""
+    ``execute([...])`` canonicalizes, links, and dispatches one fused
+    program per touched relation (lineitem + part = 2 dispatches, vs 4
+    running the three queries back to back), streaming each shared source
+    plane once. The row gates the dispatch count, the linked lineitem
+    plane-read total, and the sublinearity ratio (batch reads / costliest
+    single, x1000 so the count gate stays integral); ``exact`` asserts
+    bit-parity with the sequential per-query paths AND ratio <= 1.6."""
     from repro.db import queries
 
     specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
@@ -191,12 +197,12 @@ def bench_concurrent(db) -> List[dict]:
     # (the linked lineitem program has a different cache signature than
     # any single-query program compiled above).
     t0 = time.perf_counter()
-    batch = db.run_queries(specs)
+    batch = db.execute(specs)
     cold = (time.perf_counter() - t0) * 1e6
     reps = 3
     t0 = time.perf_counter()
     for _ in range(reps):
-        batch = db.run_queries(specs)
+        batch = db.execute(specs)
     warm = (time.perf_counter() - t0) / reps * 1e6
     stats = db.last_batch_stats
     li = stats["relations"]["lineitem"]
@@ -206,13 +212,13 @@ def bench_concurrent(db) -> List[dict]:
     # Sequential reference: the same three queries one at a time, for the
     # dispatch count, per-single plane reads, and the parity oracle.
     t0 = time.perf_counter()
-    seq = [db.run_pim(specs[0]), db.run_pim(specs[1]),
-           db.run_query(specs[2])]
+    seq = [db.execute(specs[0].filter_only()),
+           db.execute(specs[1].filter_only()), db.execute(specs[2])]
     seq_us = (time.perf_counter() - t0) * 1e6
     singles = []
     seq_dispatches = 0
     for spec in specs:
-        db.run_queries([spec])
+        db.execute([spec])
         s1 = db.last_batch_stats
         singles.append(s1["relations"]["lineitem"]["plane_reads"])
         seq_dispatches += s1["n_dispatches"]
@@ -234,6 +240,82 @@ def bench_concurrent(db) -> List[dict]:
                  batch_speedup=round(seq_us / warm, 2),
                  exact=parity and batch_reads < sum(singles)
                  and ratio <= 1.6)]
+
+
+def bench_serve(db) -> List[dict]:
+    """Async serving frontend: a 32-request trace (4 waves over 6 distinct
+    queries, dups inside each wave) replayed at concurrency 8 through
+    ``repro.serve.QueryService`` vs a sequential ``db.execute`` loop over
+    the same trace. Each warm rep uses a FRESH service (cold result
+    cache), so the measured speedup comes from in-window coalescing +
+    linked dispatch + intra-replay cache hits — not a pre-warmed cache.
+    ``exact`` asserts bit-parity with the sequential results AND the
+    >= 2x throughput acceptance bar; qps, p50/p99 and plane reads ride
+    in meta with dispatches/plane_reads/p99 CI-gated."""
+    import asyncio
+
+    from repro.db import queries
+    from repro.serve import QueryService
+
+    wave = ["Q1", "Q6", "Q14", "Q3", "Q12", "Q19", "Q6", "Q1"]
+    trace = [queries.get_query(n) for n in wave * 4]
+    conc = 8
+
+    def replay():
+        async def run():
+            svc = QueryService(db, max_window=conc, max_wait_s=0.002,
+                               max_pending=conc)
+            gate = asyncio.Semaphore(conc)
+
+            async def one(spec):
+                async with gate:
+                    return await svc.submit(spec)
+
+            async with svc:
+                t0 = time.perf_counter()
+                results = await asyncio.gather(*[one(s) for s in trace])
+                wall = time.perf_counter() - t0
+                return results, svc.stats(), wall
+
+        return asyncio.run(run())
+
+    # Sequential reference: one execute() per request, warm first.
+    for name in set(wave):
+        db.execute(queries.get_query(name))
+    t0 = time.perf_counter()
+    seq = [db.execute(s) for s in trace]
+    seq_us = (time.perf_counter() - t0) * 1e6
+
+    # Cold: the first replay pays the admission windows' linked-program
+    # XLA compiles (window composition differs from the static batches).
+    t0 = time.perf_counter()
+    replay()
+    cold = (time.perf_counter() - t0) * 1e6
+    reps = 3
+    walls = []
+    for _ in range(reps):
+        results, stats, wall = replay()
+        walls.append(wall * 1e6)
+    warm = sum(walls) / reps
+
+    parity = all(r.rows == s.rows and r.aggregates == s.aggregates
+                 for r, s in zip(results, seq))
+    lat = stats["latency_ms"]
+    qps = len(trace) / (warm / 1e6)
+    qps_seq = len(trace) / (seq_us / 1e6)
+    return [_row("serve_concurrent", warm, cold,
+                 n_requests=len(trace), concurrency=conc,
+                 qps=round(qps), qps_sequential=round(qps_seq),
+                 speedup=round(qps / qps_seq, 2),
+                 p50_ms=round(lat["p50"], 3),
+                 p99_ms=round(lat["p99"], 3),
+                 dispatches=stats["dispatches"],
+                 plane_reads=stats["plane_reads"],
+                 cache_hits=stats["cache"]["hits"],
+                 coalesced=stats["coalesced"],
+                 windows=stats["batcher"]["windows"],
+                 sequential_us=round(seq_us),
+                 exact=parity and qps >= 2 * qps_seq)]
 
 
 def bench_verify(db) -> List[dict]:
@@ -278,12 +360,12 @@ def bench_e2e(db) -> List[dict]:
     for qname in ("Q3", "Q14"):
         spec = queries.get_query(qname)
         t0 = time.perf_counter()
-        first = db.run_query(spec)            # pays the XLA compiles
+        first = db.execute(spec)              # pays the XLA compiles
         cold = (time.perf_counter() - t0) * 1e6
         reps = 3
         t0 = time.perf_counter()
         for _ in range(reps):
-            res = db.run_query(spec)
+            res = db.execute(spec)
         warm = (time.perf_counter() - t0) / reps * 1e6
         base = E.run_host_stage(spec.host,
                                 E.baseline_context(db.tables, spec))
@@ -320,7 +402,7 @@ def bench_q1_grouped(db) -> List[dict]:
         return r.scalar(group_regs[0][1]["sum_qty"][1])
 
     cold, warm = _time(q1_once, reps=3)
-    fused = db.run_pim(spec, fused=True)        # cached executable: warm
+    fused = db.execute(spec)                    # cached executable: warm
     base = db.run_baseline(spec)
     n_reduce_instrs = sum(1 for i in c.program
                           if i.kind in ("ReduceSum", "ReduceMinMax"))

@@ -10,7 +10,10 @@ plane-read sublinearity ratio (``q1_q6_q14_concurrent``: the linked
 batch must keep reading fewer planes than the three queries run back to
 back — its ``meta.exact`` additionally hard-fails on any loss of
 bit-parity with the sequential paths or a ratio above 1.6x the
-costliest single query), and — promoted from tabulated to gated since
+costliest single query), the async serving row (``serve_concurrent``:
+dispatch/plane-read totals and p99 tail latency of the concurrency-8
+trace replay, with the >= 2x qps-vs-sequential bar hard-failing via
+``meta.exact``), and — promoted from tabulated to gated since
 the carry-save arithmetic PR — per-query cold XLA compile latency. The
 full per-row compile-latency table still prints every run, so the trend
 the ROADMAP tracks has a visible trajectory in every CI log.
@@ -67,6 +70,14 @@ GATES = [
     ("q1_q6_q14_concurrent", "meta.dispatches", "count"),
     ("q1_q6_q14_concurrent", "meta.plane_reads_batch", "count"),
     ("q1_q6_q14_concurrent", "meta.sublinearity_x1000", "count"),
+    # Async serving frontend: the 32-request concurrency-8 replay must
+    # keep its dispatch and plane-read totals (admission-window linking +
+    # result cache working), its tail latency, and its wall — the >= 2x
+    # qps-vs-sequential acceptance bar itself hard-fails via meta.exact.
+    ("serve_concurrent", "warm_us", "time"),
+    ("serve_concurrent", "meta.p99_ms", "time"),
+    ("serve_concurrent", "meta.dispatches", "count"),
+    ("serve_concurrent", "meta.plane_reads", "count"),
 ]
 
 

@@ -1,22 +1,27 @@
 """TPC-H analytics end-to-end: the paper's evaluation, miniaturised.
 
-Generates TPC-H at a small scale factor, executes the paper's query set on
-the bulk-bitwise engine AND the column-scan baseline, verifies equality,
-and prints the paper-scale (SF=1000) modeled speedup/energy/endurance —
-the numbers Figs. 8/11/15 report. Queries with a host stage then run END
-TO END (PIM filter + in-dispatch materialization + host join/agg/order),
-and the full decoded result rows of one joined query (Q3 by default) are
-printed — the part of the pipeline the paper leaves to the host. Finally
-a CONCURRENT batch (Q1+Q6+Q14 by default) goes through
-``db.run_queries``: canonicalized, linked, and dispatched as one fused
-program per relation, with the dispatch/plane-read amortization printed
-from ``db.last_batch_stats``.
+Generates TPC-H at a small scale factor, executes the paper's query set
+through the unified ``PimDatabase.execute`` API on the bulk-bitwise
+engine AND the column-scan oracle (``Engine.ORACLE``), verifies
+equality, and prints the paper-scale (SF=1000) modeled speedup/energy/
+endurance — the numbers Figs. 8/11/15 report. Queries with a host stage
+then run END TO END (PIM filter + in-dispatch materialization + host
+join/agg/order), and the full decoded result rows of one joined query
+(Q3 by default) are printed — the part of the pipeline the paper leaves
+to the host. A CONCURRENT batch (Q1+Q6+Q14 by default) goes through
+``db.execute([...])``: canonicalized, linked, and dispatched as one
+fused program per relation, with the dispatch/plane-read amortization
+printed from ``db.last_batch_stats``. Finally the same workload is
+replayed as a concurrent STREAM through the async serving frontend
+(``repro.serve.QueryService``), reporting qps/p50/p99 against a
+sequential loop.
 
     PYTHONPATH=src python examples/tpch_analytics.py [--sf 0.01]
 """
 import argparse
 
-from repro.db import database, queries, tpch
+from repro.db import Engine, database, queries, tpch
+from repro.launch.serve import serve_trace
 
 
 def main():
@@ -38,8 +43,10 @@ def main():
     print(f"{'query':9s} {'kind':7s} {'cycles':>9s} {'speedup':>8s} "
           f"{'readred':>8s} {'energy':>7s} {'endur(10y)':>10s} verified")
     for spec in specs:
-        pim = db.run_pim(spec)
-        base = db.run_baseline(spec)
+        # filter_only(): the paper's mask/aggregate scope of every query,
+        # host stage (if any) dropped — the cost report's subject.
+        pim = db.execute(spec.filter_only())
+        base = db.execute(spec.filter_only(), engine=Engine.ORACLE)
         ok = all((pim.relations[r].mask == base.relations[r].mask).all()
                  for r in spec.filters) and pim.aggregates == base.aggregates
         rep = database.cost_report(pim, sf_scale=1000 / args.sf)
@@ -59,7 +66,7 @@ def main():
         print(f"\n{spec.name} has no host stage; pick one of "
               f"{[q.name for q in queries.all_queries() if q.host]}")
         return
-    res = db.run_query(spec)
+    res = db.execute(spec)
     mat = ", ".join(f"{r}:{n}" for r, n in res.materialized_rows.items())
     print(f"\n== {spec.name} end to end: PIM stage {res.pim_s * 1e3:.1f} ms "
           f"(materialized rows {mat}), host stage {res.host_s * 1e3:.1f} ms ==")
@@ -72,7 +79,7 @@ def main():
     # structurally-equal predicate subtrees compile once (CSE), and each
     # query demuxes its own results from the shared ProgramResult.
     batch_specs = [queries.get_query(n) for n in args.batch]
-    results = db.run_queries(batch_specs)
+    results = db.execute(batch_specs)
     stats = db.last_batch_stats
     print(f"\n== concurrent batch {'+'.join(args.batch)}: "
           f"{stats['n_queries']} queries -> {stats['n_dispatches']} fused "
@@ -90,9 +97,26 @@ def main():
             print(f"  {spec.name}: {len(res.rows)} result rows (host stage "
                   f"on demuxed materialization)")
         else:
-            ok = res.aggregates == db.run_baseline(spec).aggregates
+            oracle = db.execute(spec, engine=Engine.ORACLE)
+            ok = res.aggregates == oracle.aggregates
             print(f"  {spec.name}: {sum(len(g) for g in res.aggregates.values())}"
                   f" aggregates {'✓' if ok else 'MISMATCH'}")
+
+    # Streamed serving: the batch queries arrive CONCURRENTLY (x2 repeats,
+    # so the result cache and in-flight coalescing both engage) through
+    # the async frontend — admission windows re-create the fused batch
+    # above on the fly.
+    trace = [queries.get_query(n) for n in args.batch * 2]
+    serve_trace(db, trace)                      # warm executables
+    served, sstats, wall = serve_trace(db, trace)
+    lat = sstats["latency_ms"]
+    print(f"\n== served {len(trace)} concurrent submissions in "
+          f"{wall * 1e3:.1f} ms ({len(trace) / wall:.0f} qps, "
+          f"p50 {lat['p50']:.1f} ms, p99 {lat['p99']:.1f} ms) ==")
+    print(f"  {sstats['dispatches']} dispatches, "
+          f"{sstats['coalesced']} coalesced, "
+          f"{sstats['cache']['hits']} cache hits, "
+          f"windows: {sstats['batcher']['windows']}")
 
 
 if __name__ == "__main__":

@@ -3,10 +3,12 @@
 ``python -m repro.analysis.lint`` builds the full query inventory — all
 19 TPC-H query specs (filter programs with their group/aggregate tails),
 the end-to-end materialize variants of every query with a host stage,
-a scan-all program per PIM relation, and LINKED multi-query programs
+a scan-all program per PIM relation, LINKED multi-query programs
 (every adjacent pair plus a leading triple of the queries sharing each
-relation, built exactly the way ``PimDatabase.run_queries`` builds them:
-namespaced compile, ``core.program.link_programs``) — and runs every
+relation, built exactly the way ``PimDatabase.execute`` builds them:
+namespaced compile, ``core.program.link_programs``), and the serving
+frontend's admission-window fusions (the coalesced windows the
+``serve_concurrent`` bench and CLI traces dispatch) — and runs every
 analysis pass over each program on all three backend schedules ("trace",
 "jnp", "pallas"). No XLA executable is built: only the static front half
 of the compile pipeline runs, so the whole sweep takes seconds.
@@ -107,11 +109,55 @@ def collect_linked_programs(db: PimDatabase) -> List[Program]:
     return programs
 
 
+def collect_serve_programs(db: PimDatabase) -> List[Program]:
+    """Admission-window fusion products of the serving frontend: the
+    windows ``repro.serve.QueryService`` actually dispatches when the
+    benchmark/CLI traces replay — each window's coalesced spec set
+    (duplicates collapse onto one in-flight dispatch, exactly as the
+    service's cache-key coalescing does) linked per relation.  These are
+    the programs reachable through ``PimDatabase.execute`` that the
+    static pair/triple sweep above does not cover."""
+    from repro.core import program as prog
+    from repro.db.database import Engine
+    from repro.serve.cache import spec_cache_key
+
+    # The serve_concurrent bench wave + the CLI default trace's
+    # distinct-query window.
+    windows = [
+        ("bench-wave", ["Q1", "Q6", "Q14", "Q3", "Q12", "Q19",
+                        "Q6", "Q1"]),
+        ("cli-trace", ["Q1", "Q6", "Q14", "Q3", "Q12", "Q19",
+                       "Q3", "Q6", "Q14", "Q12", "Q1", "Q6"]),
+    ]
+    programs: List[Program] = []
+    seen = set()
+    for wname, names in windows:
+        coalesced, keys = [], set()
+        for n in names:
+            spec = Q.get_query(n)
+            k = spec_cache_key(db, spec, Engine.FUSED)
+            if k not in keys:
+                keys.add(k)
+                coalesced.append(spec)
+        _, rel_programs = db._compile_batch(coalesced)
+        for r, progs in sorted(rel_programs.items()):
+            if len(progs) < 2:
+                continue
+            lp = prog.link_programs(progs, relation=db.relations[r])
+            if (r, lp.cache_key) in seen:
+                continue
+            seen.add((r, lp.cache_key))
+            programs.append((f"serve/{wname}/{r}", db.relations[r],
+                             lp.instrs, lp.mask_outputs))
+    return programs
+
+
 def lint(sf: float = 0.002, strict: bool = False,
          verbose: bool = False) -> int:
     t0 = time.perf_counter()
     db = PimDatabase(tpch.generate(sf=sf, seed=0))
-    programs = collect_programs(db) + collect_linked_programs(db)
+    programs = (collect_programs(db) + collect_linked_programs(db)
+                + collect_serve_programs(db))
 
     totals = {"error": 0, "warning": 0, "info": 0}
     n_checked = 0

@@ -400,6 +400,11 @@ class PimRelation:
     planes: Dict[str, jnp.ndarray]       # attr -> (n_bits, W) uint32
     valid: jnp.ndarray                   # (W,) uint32 valid-record mask
     n_records: int
+    # Monotonic content version. Any mutation of the resident copy
+    # (INSERT/DELETE/UPDATE, reload) must produce a relation with a higher
+    # version; serving-layer result caches key on it, so cached query
+    # results are invalidated by construction, never by heuristic.
+    version: int = 0
 
     @classmethod
     def from_columns(cls, name: str, columns: Mapping[str, np.ndarray],
@@ -421,6 +426,12 @@ class PimRelation:
 
     def bytes_resident(self) -> int:
         return sum(int(p.size) * 4 for p in self.planes.values()) + self.valid.size * 4
+
+    def bumped(self) -> "PimRelation":
+        """A copy with the content version advanced — the handle mutation
+        paths (and tests simulating them) publish so version-keyed caches
+        stop serving results computed against the old contents."""
+        return dataclasses.replace(self, version=self.version + 1)
 
     def shard(self, mesh, shard_axes=None) -> "PimRelation":
         """Return a copy with every bit-plane (and the valid plane) placed

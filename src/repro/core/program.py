@@ -729,6 +729,20 @@ class LinkedProgram:
     n_instrs_unlinked: int               # sum of member program lengths
     n_deduped: int                       # instructions removed by CSE
 
+    @property
+    def cache_key(self) -> str:
+        """Short stable digest of the linked instruction stream + outputs.
+
+        Canonicalization + deterministic linking make a recurring batch
+        produce byte-identical instruction tuples, so this key is equal
+        for equal-meaning batches: the serving layer uses it to label
+        dispatches, and it varies exactly when the executable-cache
+        signature (:func:`program_signature`) would.
+        """
+        import hashlib
+        return hashlib.sha256(
+            repr((self.instrs, self.mask_outputs)).encode()).hexdigest()[:16]
+
 
 def link_programs(programs: Sequence[Tuple[Sequence[isa.PimInstruction],
                                            Sequence[str]]],
@@ -858,6 +872,36 @@ def set_program_cache_capacity(capacity: int) -> None:
     _FN_CACHE.set_capacity(capacity)
 
 
+def program_cache_stats() -> Dict[str, int]:
+    """Hit/miss/eviction counters of the compiled-executable LRU — the
+    serving layer surfaces these so a trace that should be recurring
+    (identical canonical batches) is visibly hitting warm executables."""
+    return {"hits": _FN_CACHE.hits, "misses": _FN_CACHE.misses,
+            "evictions": _FN_CACHE.evictions, "size": len(_FN_CACHE),
+            "capacity": _FN_CACHE.capacity}
+
+
+def program_signature(instrs: Tuple[isa.PimInstruction, ...],
+                      mask_outputs: Tuple[str, ...], backend: str,
+                      interpret: bool, relation: eng.PimRelation,
+                      widths: Mapping[str, int],
+                      mesh: Optional[Mesh] = None,
+                      shard_axes: Optional[Tuple[str, ...]] = None) -> tuple:
+    """The full static signature a compiled executable is cached under.
+
+    Everything that can change the traced computation is in here —
+    instruction stream, requested outputs, backend/interpret mode, the
+    relation's layout (name + padded word count + source widths), and the
+    mesh/sharding — and nothing else: demux metadata (``query_slots``)
+    and the relation's *content* (including its ``version``) are excluded
+    on purpose, so recompiling a recurring batch against refreshed data
+    still reuses the warm executable.
+    """
+    return (instrs, mask_outputs, backend, interpret, relation.name,
+            relation.layout.n_words, tuple(sorted(widths.items())),
+            mesh, shard_axes)
+
+
 @dataclasses.dataclass
 class CompiledProgram:
     """A relation program lowered to one jit-compiled dispatch.
@@ -887,6 +931,8 @@ class CompiledProgram:
     # Source attribute -> bit-planes it contributes to the streamed stack.
     source_plane_counts: Mapping[str, int] = \
         dataclasses.field(default_factory=dict)
+    # The executable-cache signature (see :func:`program_signature`).
+    signature: Optional[tuple] = None
 
     @property
     def n_dispatches(self) -> int:
@@ -1110,9 +1156,8 @@ def compile_program(relation: eng.PimRelation,
         from . import distributed as dist  # lazy: avoids import cycle
         shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
 
-    sig = (instrs, mask_outputs, backend, interpret, relation.name,
-           relation.layout.n_words, tuple(sorted(widths.items())),
-           mesh, shard_axes)
+    sig = program_signature(instrs, mask_outputs, backend, interpret,
+                            relation, widths, mesh, shard_axes)
     fn = _FN_CACHE.get(sig)
     if fn is None:
         # Static verification rides the cache miss: every program is
@@ -1144,7 +1189,8 @@ def compile_program(relation: eng.PimRelation,
                            mesh=mesh, shard_axes=shard_axes,
                            mat_attrs=mat_attrs,
                            query_slots=tuple(query_slots),
-                           source_plane_counts=dict(widths))
+                           source_plane_counts=dict(widths),
+                           signature=sig)
 
 
 def run_program(cp: CompiledProgram, relation: eng.PimRelation) -> ProgramResult:

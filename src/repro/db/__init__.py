@@ -1,3 +1,29 @@
-"""Database substrate: TPC-H schema/generator, compiler, queries, runner."""
+"""Database substrate: TPC-H schema/generator, compiler, queries, runner.
+
+Public surface: ``PimDatabase.execute`` + :class:`Engine` +
+:class:`QueryResult` are the query API; everything else here is the
+substrate behind it (schema, generator, predicate compiler, specs).
+"""
 from . import compiler, database, queries, schema, tpch  # noqa: F401
-from .database import PimDatabase, cost_report  # noqa: F401
+from .database import (  # noqa: F401
+    Engine,
+    PendingQuery,
+    PimDatabase,
+    QueryResult,
+    avg_value,
+    cost_report,
+)
+
+__all__ = [
+    "Engine",
+    "PendingQuery",
+    "PimDatabase",
+    "QueryResult",
+    "avg_value",
+    "compiler",
+    "cost_report",
+    "database",
+    "queries",
+    "schema",
+    "tpch",
+]

@@ -1,19 +1,41 @@
-"""PimDatabase: the PIM-resident database copy + query run harness.
+"""PimDatabase: the PIM-resident database copy + unified query execution.
 
-Runs a QuerySpec three ways:
-  * fused PIM path (default): the whole per-relation instruction program
-    compiled into ONE jax dispatch (`core.program`) — the paper's
-    single-readout execution model;
-  * eager PIM engine (`fused=False`): instruction-at-a-time oracle;
-  * numpy baseline (the paper's in-memory column-store scan, §5.5);
-and produces the paper-faithful cost report (cycles, read traffic, modeled
-latency/energy at any scale factor, including the paper's SF=1000).
+``PimDatabase.execute(spec_or_specs, *, engine=Engine.FUSED)`` is the one
+entry point:
+
+  * a single ``QuerySpec`` returns one :class:`QueryResult`; a sequence
+    returns one result per spec in batch order (``[]`` for an empty
+    batch, a one-element list for a singleton — no link/dispatch edge
+    case);
+  * multi-spec FUSED batches are cross-query fused: compiled
+    independently (canonicalized, namespaced), grouped by relation,
+    linked into ONE SSA program per relation
+    (``core.program.link_programs``) and dispatched once per relation;
+  * ``engine`` picks the substrate: ``Engine.FUSED`` (one compiled jax
+    dispatch per relation program — the paper's single-readout model),
+    ``Engine.EAGER`` (instruction-at-a-time PIM engine, the oracle),
+    ``Engine.ORACLE`` (numpy column-store scan, the paper's §5.5
+    comparison point).
+
+Specs with a host stage run END TO END (PIM filter + in-dispatch
+materialization + host join/agg/order into full TPC-H rows); specs
+without one keep the paper's filter/aggregate scope.  The batch path is
+split-phase for the async serving layer (``repro.serve``):
+``dispatch_batch`` compiles, links and runs the array stage only, and
+``finish_query`` completes each query's host stage — so a worker pool
+can drain host stages while the next admission window dispatches.
+``run_pim``/``run_query``/``run_queries`` remain as deprecated shims.
+The module also produces the paper-faithful cost report (cycles, read
+traffic, modeled latency/energy at any scale factor, incl. SF=1000).
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
+import threading
 import time
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -49,12 +71,146 @@ class RelationRun:
     n_reduce_jobs: int = 0
 
 
+class Engine(enum.Enum):
+    """Execution substrate of :meth:`PimDatabase.execute`.
+
+    FUSED — one compiled jax dispatch per relation program (the paper's
+    single-readout model; cross-query linked for multi-spec batches).
+    EAGER — the instruction-at-a-time PIM engine, the bit-level oracle.
+    ORACLE — the numpy column-store scan baseline (paper §5.5).
+    """
+    FUSED = "fused"
+    EAGER = "eager"
+    ORACLE = "oracle"
+
+    @classmethod
+    def coerce(cls, v) -> "Engine":
+        """Accept an Engine, its string value, or a legacy ``fused=``
+        bool (True -> FUSED, False -> EAGER)."""
+        if isinstance(v, Engine):
+            return v
+        if isinstance(v, str):
+            return cls(v.lower())
+        return cls.FUSED if v else cls.EAGER
+
+
+# Result columns that are derived money at cents x percent scale.
+_REVENUE_COLS = {"revenue", "promo_revenue"}
+
+
 @dataclasses.dataclass
-class QueryRun:
+class QueryResult:
+    """Uniform result of :meth:`PimDatabase.execute` — every field is
+    present on every (engine, spec) combination, with consistent names.
+
+    Mask/aggregate scope (``spec.host is None``): ``aggregates``
+    (group -> {agg: value}) and ``relations`` are populated and
+    ``columns``/``rows`` are empty.  End-to-end scope: ``columns`` /
+    ``rows`` / ``materialized_rows`` hold the host stage's full result
+    table — ``rows`` are the exact PIM-encoded integers (``None`` for
+    empty min/max/avg) the oracle comparison uses, ``decoded_rows()``
+    applies the schema's presentation decoding (currency, ISO dates,
+    dictionary strings).  ``batch_stats`` is the dispatch-level
+    accounting of the batch this query ran in (shared by every member of
+    one ``execute(list)`` call); ``cached`` is set by the serving layer
+    when the result came from its version-keyed cache.
+    """
     spec: Q.QuerySpec
-    relations: Dict[str, RelationRun]
-    aggregates: Dict[str, Dict[str, object]]   # group -> {agg: value}
-    wall_time_s: float
+    engine: Engine = Engine.FUSED
+    aggregates: Dict[str, Dict[str, object]] = dataclasses.field(
+        default_factory=dict)
+    relations: Dict[str, RelationRun] = dataclasses.field(
+        default_factory=dict)
+    columns: Tuple[str, ...] = ()
+    rows: List[tuple] = dataclasses.field(default_factory=list)
+    pim_s: float = 0.0
+    host_s: float = 0.0
+    wall_s: float = 0.0
+    materialized_rows: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    batch_stats: Optional[Dict[str, object]] = None
+    cached: bool = False
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def kind(self) -> str:
+        return getattr(self.spec, "kind", "")
+
+    @property
+    def wall_time_s(self) -> float:
+        return self.wall_s
+
+    @classmethod
+    def from_table(cls, spec, table: "E.HostTable", pim_s: float,
+                   host_s: float, mat_rows: Dict[str, int],
+                   engine: Engine = Engine.FUSED,
+                   batch_stats: Optional[Dict[str, object]] = None
+                   ) -> "QueryResult":
+        cols, rows = _table_rows(table)
+        return cls(spec=spec, engine=engine, columns=cols, rows=rows,
+                   pim_s=pim_s, host_s=host_s, wall_s=pim_s + host_s,
+                   materialized_rows=dict(mat_rows),
+                   batch_stats=batch_stats)
+
+    def decoded_rows(self) -> List[tuple]:
+        out = []
+        for row in self.rows:
+            dec = []
+            for c, v in zip(self.columns, row):
+                if v is None:
+                    dec.append(None)
+                elif c in _REVENUE_COLS:
+                    dec.append(S.decode_revenue(v))
+                else:
+                    dec.append(S.decode_value(c, v))
+            out.append(tuple(dec))
+        return out
+
+    @property
+    def total_materialized(self) -> int:
+        return sum(self.materialized_rows.values())
+
+
+# Legacy name: the old mask/aggregate-scope result type. Unified now.
+QueryRun = QueryResult
+
+
+def _table_rows(table: "E.HostTable") -> Tuple[Tuple[str, ...], List[tuple]]:
+    def cell(v):
+        if v is None:
+            return None
+        if isinstance(v, (float, np.floating)):   # host-stage avg
+            return float(v)
+        return int(v)
+
+    cols = tuple(table.columns)
+    rows = [tuple(cell(table.columns[c][i]) for c in cols)
+            for i in range(table.n_rows)]
+    return cols, rows
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    """Split-phase handle between :meth:`PimDatabase.dispatch_batch` and
+    :meth:`PimDatabase.finish_query`: the array stage has run (masks,
+    aggregates, materialized columns demuxed); the host stage — if the
+    spec has one — has not."""
+    spec: Q.QuerySpec
+    engine: Engine
+    result: Optional[QueryResult] = None    # complete already (no host)
+    host: Optional[object] = None           # E.HostStage still to run
+    materialized: Dict[str, "E.HostTable"] = dataclasses.field(
+        default_factory=dict)
+    mat_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
+    pim_s: float = 0.0
+    batch_stats: Optional[Dict[str, object]] = None
+
+    @property
+    def needs_host(self) -> bool:
+        return self.result is None
 
 
 @dataclasses.dataclass
@@ -93,9 +249,12 @@ class PimDatabase:
             self.shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
         else:
             self.shard_axes = None
-        # Counters of the most recent run_queries() batch (dispatches,
-        # plane reads, link dedup, walls) — None until a batch has run.
+        # Counters of the most recent FUSED execute() call (dispatches,
+        # plane reads, link dedup, walls) — None until one has run.
         self.last_batch_stats: Optional[Dict[str, object]] = None
+        # finish_query may accumulate host_s into shared batch stats from
+        # several host-pool workers at once.
+        self._stats_lock = threading.Lock()
         self.relations: Dict[str, eng.PimRelation] = {}
         for name, cols in tables.items():
             if S.SCHEMA[name].in_pim:
@@ -173,19 +332,62 @@ class PimDatabase:
                                        if cp else 0),
             n_reduce_jobs=cp.n_reduce_jobs if cp else 0)
 
-    def run_pim(self, spec: Q.QuerySpec, fused: bool = True) -> QueryRun:
-        """Execute a query on the PIM copy.
+    # -- unified execution entry point --------------------------------------
+    def execute(self, spec_or_specs: Union[Q.QuerySpec, Sequence[Q.QuerySpec]],
+                *, engine: Union[Engine, str, bool] = Engine.FUSED
+                ) -> Union[QueryResult, List[QueryResult]]:
+        """THE query entry point.  A single :class:`~repro.db.queries.
+        QuerySpec` returns one :class:`QueryResult`; a sequence returns
+        one result per spec in batch order.  ``engine`` selects the
+        substrate (:class:`Engine`; a string value or legacy ``fused=``
+        bool is coerced).
 
-        fused=True (default): one compiled dispatch per relation program —
-        the paper's single-pass/single-readout execution model. With a
-        ``mesh`` the dispatch is the shard_map-wrapped SPMD executable
-        (still one logical dispatch; see ``core.distributed``).
-        fused=False: the eager instruction-at-a-time engine (oracle) —
-        also correct on sharded relations, via global ops.
+        Multi-spec FUSED batches are cross-query fused — linked into ONE
+        SSA program per relation and dispatched once per relation, so N
+        queries over ``lineitem`` stream its bit-planes once, not N
+        times.  An empty sequence returns ``[]`` and a one-element
+        sequence takes the direct single-query path — neither triggers
+        the link/dispatch machinery.  Every value is bit-identical
+        across engines and batch shapes.  Batch-level counters land in
+        ``self.last_batch_stats`` (FUSED only).
         """
-        t0 = time.perf_counter()
+        engine = Engine.coerce(engine)
+        if isinstance(spec_or_specs, Q.QuerySpec):
+            return self._execute_one(spec_or_specs, engine)
+        specs = list(spec_or_specs)
+        if not specs:
+            # Nothing to link or dispatch; clear stale batch counters so
+            # callers never attribute a previous batch to this one.
+            self.last_batch_stats = _empty_batch_stats()
+            return []
+        if len(specs) == 1 or engine is not Engine.FUSED:
+            return [self._execute_one(s, engine) for s in specs]
+        pendings, _ = self.dispatch_batch(specs)
+        return [self.finish_query(p) for p in pendings]
+
+    def _execute_one(self, spec: Q.QuerySpec, engine: Engine) -> QueryResult:
+        if engine is Engine.ORACLE:
+            return self._execute_baseline(spec)
+        if spec.host is not None:
+            return self._execute_host(spec, engine)
+        return self._execute_pim(spec, engine)
+
+    def _execute_pim(self, spec: Q.QuerySpec, engine: Engine) -> QueryResult:
+        """Mask/aggregate-scope execution on the PIM copy.
+
+        FUSED: one compiled dispatch per relation program — the paper's
+        single-pass/single-readout execution model.  With a ``mesh`` the
+        dispatch is the shard_map-wrapped SPMD executable (still one
+        logical dispatch; see ``core.distributed``).  EAGER: the
+        instruction-at-a-time engine (oracle) — also correct on sharded
+        relations, via global ops.
+        """
+        t_all = time.perf_counter()
+        fused = engine is Engine.FUSED
         rel_runs: Dict[str, RelationRun] = {}
         aggs: Dict[str, Dict[str, object]] = {}
+        rel_stats: Dict[str, Dict[str, object]] = {}
+        pim_s = 0.0
         for rel_name, pred in spec.filters.items():
             rel = self.relations[rel_name]
             c, mask_reg, group_regs = self._compile_relation(rel, spec, pred)
@@ -197,11 +399,15 @@ class PimDatabase:
                                           backend=self.backend,
                                           mesh=self.mesh,
                                           shard_axes=self.shard_axes)
+                t0 = time.perf_counter()
                 res = prog.run_program(cp, rel)
+                dt = time.perf_counter() - t0
+                pim_s += dt
                 if group_regs:
                     aggs.update(self._finalize_aggs(
                         group_regs, res.scalar, res.scalar))
                 mask = res.mask(mask_reg)
+                rel_stats[rel_name] = _single_relation_stats(c, cp, dt)
             else:
                 e = eng.Engine(rel, backend=self.backend)
                 e.run(c.program)
@@ -213,25 +419,36 @@ class PimDatabase:
 
             rel_runs[rel_name] = self._relation_run(
                 rel, rel_name, spec, pred, mask, list(c.program), cp=cp)
-        return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
+        wall = time.perf_counter() - t_all
+        stats = None
+        if fused:
+            stats = _empty_batch_stats()
+            stats.update(n_queries=1, n_dispatches=len(rel_stats),
+                         pim_s=pim_s, wall_s=wall, relations=rel_stats)
+            self.last_batch_stats = stats
+        return QueryResult(spec=spec, engine=engine, aggregates=aggs,
+                           relations=rel_runs, pim_s=pim_s, wall_s=wall,
+                           batch_stats=stats)
 
     # -- end-to-end execution (PIM stage + host stage) -----------------------
-    def run_query(self, spec: Q.QuerySpec, fused: bool = True
-                  ) -> "QueryResult":
+    def _execute_host(self, spec: Q.QuerySpec, engine: Engine
+                      ) -> QueryResult:
         """Execute a query END TO END: PIM filters + in-dispatch
         materialization hand the host only the selected records; the
         host stage (``db.exec``) joins, applies residual predicates,
         aggregates, and orders them into full TPC-H result rows.
 
-        fused=True compiles each relation's filter+materialize program
-        into one dispatch (sharded over the mesh when configured, masks
-        and value buffers staying on-device/sharded); fused=False runs
-        the eager engine as the oracle path.
+        FUSED compiles each relation's filter+materialize program into
+        one dispatch (sharded over the mesh when configured, masks and
+        value buffers staying on-device/sharded); EAGER runs the
+        instruction-at-a-time engine as the oracle path.
         """
+        fused = engine is Engine.FUSED
         pim_stage, host = E.split_query(spec)
         t0 = time.perf_counter()
         materialized: Dict[str, E.HostTable] = {}
         mat_rows: Dict[str, int] = {}
+        rel_stats: Dict[str, Dict[str, object]] = {}
         for rel_name, pred, cols in pim_stage:
             rel = self.relations[rel_name]
             c = Compiler(rel)
@@ -243,7 +460,10 @@ class PimDatabase:
                                           backend=self.backend,
                                           mesh=self.mesh,
                                           shard_axes=self.shard_axes)
+                t1 = time.perf_counter()
                 vals = prog.run_program(cp, rel).materialized(mat_reg)
+                rel_stats[rel_name] = _single_relation_stats(
+                    c, cp, time.perf_counter() - t1)
             else:
                 e = eng.Engine(rel, backend=self.backend)
                 e.run(c.program)
@@ -257,7 +477,16 @@ class PimDatabase:
         table = E.run_host_stage(host, E.ExecContext(materialized,
                                                      self.tables))
         host_s = time.perf_counter() - t0
-        return QueryResult.from_table(spec, table, pim_s, host_s, mat_rows)
+        stats = None
+        if fused:
+            stats = _empty_batch_stats()
+            stats.update(n_queries=1, n_dispatches=len(rel_stats),
+                         pim_s=sum(s["pim_s"] for s in rel_stats.values()),
+                         host_s=host_s, wall_s=pim_s + host_s,
+                         relations=rel_stats)
+            self.last_batch_stats = stats
+        return QueryResult.from_table(spec, table, pim_s, host_s, mat_rows,
+                                      engine=engine, batch_stats=stats)
 
     # -- batched execution (cross-query fusion) ------------------------------
     def _compile_batch(self, specs) -> Tuple[
@@ -296,29 +525,28 @@ class PimDatabase:
                 works.append(_BatchQuery(spec, None, rels))
         return works, rel_programs
 
-    def run_queries(self, specs, fused: bool = True) -> List[object]:
-        """Execute a BATCH of queries with cross-query fusion: specs are
-        compiled independently (canonicalized, namespaced), grouped by
-        relation, linked into ONE SSA program per relation
+    def dispatch_batch(self, specs: Sequence[Q.QuerySpec]
+                       ) -> Tuple[List[PendingQuery], Dict[str, object]]:
+        """Array stage of a cross-query FUSED batch: specs are compiled
+        independently (canonicalized, namespaced), grouped by relation,
+        linked into ONE SSA program per relation
         (``core.program.link_programs`` dedups shared subexpressions),
         and dispatched ONCE per relation — N queries over ``lineitem``
-        stream its bit-planes once, not N times. Per-query outputs are
+        stream its bit-planes once, not N times.  Per-query outputs are
         demuxed through the linked program's ``query_slots``.
 
-        Returns one result per spec, batch order, matching the
-        sequential API: ``QueryResult`` for end-to-end specs (host
-        stage), ``QueryRun`` for mask/aggregate specs. Every value is
-        bit-identical to the sequential ``run_query``/``run_pim`` result.
-        ``fused=False`` is the sequential oracle fallback.
+        Host stages are NOT run here: each returned :class:`PendingQuery`
+        either already carries its complete :class:`QueryResult`
+        (mask/aggregate specs) or holds the demuxed host tables for
+        :meth:`finish_query` — so a serving layer can drain host stages
+        on a worker pool while the next admission window dispatches.
 
         Linking is deterministic, so a recurring batch produces the same
         linked instruction stream and hits the compiled-executable
-        ``LruFnCache``. Batch-level counters (dispatches, plane reads,
-        dedup, walls) land in ``self.last_batch_stats``.
+        ``LruFnCache``.  Batch-level counters (dispatches, plane reads,
+        dedup, linked cache keys, walls) land in
+        ``self.last_batch_stats`` and are returned.
         """
-        if not fused:
-            return [self.run_query(s) if s.host is not None
-                    else self.run_pim(s, fused=False) for s in specs]
         t_all = time.perf_counter()
         works, rel_programs = self._compile_batch(specs)
 
@@ -347,7 +575,27 @@ class PimDatabase:
                 n_users[br.rel_name] = n_users.get(br.rel_name, 0) + 1
         share = {r: pim_wall[r] / n_users[r] for r in pim_wall}
 
-        out: List[object] = []
+        stats: Dict[str, object] = {
+            "n_queries": len(works),
+            "n_dispatches": len(rel_programs),
+            "pim_s": sum(pim_wall.values()),
+            "demux_s": 0.0,
+            "host_s": 0.0,
+            "wall_s": 0.0,
+            "relations": {
+                r: {"n_programs": len(rel_programs[r]),
+                    "instrs_unlinked": linked[r].n_instrs_unlinked,
+                    "instrs_linked": len(linked[r].instrs),
+                    "instrs_deduped": linked[r].n_deduped,
+                    "plane_reads": compiled[r].total_plane_reads,
+                    "agg_plane_reads": compiled[r].agg_plane_reads,
+                    "source_plane_reads": compiled[r].source_plane_reads,
+                    "linked_key": linked[r].cache_key,
+                    "pim_s": pim_wall[r]}
+                for r in rel_programs},
+        }
+
+        pendings: List[PendingQuery] = []
         demux_s = 0.0
         for w in works:
             t0 = time.perf_counter()
@@ -363,11 +611,10 @@ class PimDatabase:
                          for a, v in vals.items()})
                     mat_rows[br.rel_name] = materialized[br.rel_name].n_rows
                     pim_s += share[br.rel_name]
-                table = E.run_host_stage(
-                    w.host, E.ExecContext(materialized, self.tables))
-                host_s = time.perf_counter() - t0
-                out.append(QueryResult.from_table(
-                    w.spec, table, pim_s, host_s, mat_rows))
+                pendings.append(PendingQuery(
+                    w.spec, Engine.FUSED, host=w.host,
+                    materialized=materialized, mat_rows=mat_rows,
+                    pim_s=pim_s, batch_stats=stats))
             else:
                 rel_runs: Dict[str, RelationRun] = {}
                 aggs: Dict[str, Dict[str, object]] = {}
@@ -384,32 +631,46 @@ class PimDatabase:
                         list(br.compiler.program),
                         cp=compiled[br.rel_name])
                     wall += share[br.rel_name]
-                out.append(QueryRun(w.spec, rel_runs, aggs,
-                                    wall + time.perf_counter() - t0))
+                res = QueryResult(
+                    spec=w.spec, engine=Engine.FUSED, aggregates=aggs,
+                    relations=rel_runs, pim_s=wall,
+                    wall_s=wall + time.perf_counter() - t0,
+                    batch_stats=stats)
+                pendings.append(PendingQuery(w.spec, Engine.FUSED,
+                                             result=res, pim_s=wall,
+                                             batch_stats=stats))
             demux_s += time.perf_counter() - t0
 
-        self.last_batch_stats = {
-            "n_queries": len(works),
-            "n_dispatches": len(rel_programs),
-            "pim_s": sum(pim_wall.values()),
-            "demux_s": demux_s,
-            "wall_s": time.perf_counter() - t_all,
-            "relations": {
-                r: {"n_programs": len(rel_programs[r]),
-                    "instrs_unlinked": linked[r].n_instrs_unlinked,
-                    "instrs_linked": len(linked[r].instrs),
-                    "instrs_deduped": linked[r].n_deduped,
-                    "plane_reads": compiled[r].total_plane_reads,
-                    "agg_plane_reads": compiled[r].agg_plane_reads,
-                    "source_plane_reads": compiled[r].source_plane_reads,
-                    "pim_s": pim_wall[r]}
-                for r in rel_programs},
-        }
-        return out
+        stats["demux_s"] = demux_s
+        stats["wall_s"] = time.perf_counter() - t_all
+        self.last_batch_stats = stats
+        return pendings, stats
+
+    def finish_query(self, pending: PendingQuery) -> QueryResult:
+        """Host stage of one :meth:`dispatch_batch` query.  No-op for
+        mask/aggregate specs (result already complete).  Thread-safe:
+        the serving layer calls this from a worker pool."""
+        if pending.result is not None:
+            return pending.result
+        t0 = time.perf_counter()
+        table = E.run_host_stage(
+            pending.host, E.ExecContext(pending.materialized, self.tables))
+        host_s = time.perf_counter() - t0
+        if pending.batch_stats is not None:
+            with self._stats_lock:
+                pending.batch_stats["host_s"] = (
+                    pending.batch_stats.get("host_s", 0.0) + host_s)
+        return QueryResult.from_table(
+            pending.spec, table, pending.pim_s, host_s, pending.mat_rows,
+            engine=pending.engine, batch_stats=pending.batch_stats)
 
     # -- baseline (numpy scan oracle) ----------------------------------------
-    def run_baseline(self, spec: Q.QuerySpec) -> QueryRun:
-        t0 = time.perf_counter()
+    def _execute_baseline(self, spec: Q.QuerySpec) -> QueryResult:
+        """The paper's §5.5 in-memory column-store scan.  For specs with
+        a host stage the filter masks come from the same numpy scans
+        (``exec.baseline_context``) and the host stage runs over them —
+        full result rows, zero PIM involvement."""
+        t_all = time.perf_counter()
         rel_runs: Dict[str, RelationRun] = {}
         aggs: Dict[str, Dict[str, object]] = {}
         for rel_name, pred in spec.filters.items():
@@ -425,7 +686,84 @@ class PimDatabase:
                 n_records=n, mask=mask, trace=[],
                 selectivity=float(mask.mean()),
                 filter_attr_bits=[], filter_attr_sels=[], agg_attr_bits=[])
-        return QueryRun(spec, rel_runs, aggs, time.perf_counter() - t0)
+        columns: Tuple[str, ...] = ()
+        rows: List[tuple] = []
+        mat_rows: Dict[str, int] = {}
+        host_s = 0.0
+        if spec.host is not None:
+            t0 = time.perf_counter()
+            ctx = E.baseline_context(self.tables, spec)
+            table = E.run_host_stage(spec.host, ctx)
+            host_s = time.perf_counter() - t0
+            columns, rows = _table_rows(table)
+            mat_rows = {r: t.n_rows for r, t in ctx.materialized.items()}
+        return QueryResult(spec=spec, engine=Engine.ORACLE,
+                           aggregates=aggs, relations=rel_runs,
+                           columns=columns, rows=rows, host_s=host_s,
+                           wall_s=time.perf_counter() - t_all,
+                           materialized_rows=mat_rows)
+
+    # -- relation versioning -------------------------------------------------
+    def bump_version(self, rel_name: str) -> int:
+        """Advance a relation's monotonic content version (the
+        publish-after-mutate hook; today's mutations are test reloads,
+        the ROADMAP HTAP write path will call this).  Version-keyed
+        result caches (``repro.serve``) miss from then on by
+        construction.  Returns the new version."""
+        rel = self.relations[rel_name].bumped()
+        self.relations[rel_name] = rel
+        return rel.version
+
+    # -- deprecated shims ----------------------------------------------------
+    def run_pim(self, spec: Q.QuerySpec, fused: bool = True) -> QueryResult:
+        """Deprecated: use ``execute(spec.filter_only(), engine=...)``."""
+        warnings.warn(
+            "PimDatabase.run_pim is deprecated; use "
+            "execute(spec.filter_only(), engine=Engine.FUSED/EAGER)",
+            DeprecationWarning, stacklevel=2)
+        return self.execute(spec.filter_only(), engine=Engine.coerce(fused))
+
+    def run_query(self, spec: Q.QuerySpec, fused: bool = True
+                  ) -> QueryResult:
+        """Deprecated: use ``execute(spec, engine=...)``."""
+        warnings.warn(
+            "PimDatabase.run_query is deprecated; use "
+            "execute(spec, engine=Engine.FUSED/EAGER)",
+            DeprecationWarning, stacklevel=2)
+        return self.execute(spec, engine=Engine.coerce(fused))
+
+    def run_queries(self, specs, fused: bool = True) -> List[QueryResult]:
+        """Deprecated: use ``execute(list_of_specs, engine=...)``."""
+        warnings.warn(
+            "PimDatabase.run_queries is deprecated; use "
+            "execute(specs, engine=Engine.FUSED/EAGER)",
+            DeprecationWarning, stacklevel=2)
+        return self.execute(list(specs), engine=Engine.coerce(fused))
+
+    def run_baseline(self, spec: Q.QuerySpec) -> QueryResult:
+        """Numpy column-scan oracle at the spec's filter scope —
+        equivalent to ``execute(spec.filter_only(), engine=Engine.
+        ORACLE)`` (kept un-deprecated: it is the oracle the tests pin
+        results against)."""
+        return self._execute_baseline(spec.filter_only())
+
+
+def _empty_batch_stats() -> Dict[str, object]:
+    return {"n_queries": 0, "n_dispatches": 0, "pim_s": 0.0,
+            "demux_s": 0.0, "host_s": 0.0, "wall_s": 0.0, "relations": {}}
+
+
+def _single_relation_stats(c: Compiler, cp: prog.CompiledProgram,
+                           pim_s: float) -> Dict[str, object]:
+    """Per-relation stats of an unlinked single-query dispatch, shaped
+    like the linked-batch entries (zero dedup, one program)."""
+    n = len(c.program)
+    return {"n_programs": 1, "instrs_unlinked": n, "instrs_linked": n,
+            "instrs_deduped": 0,
+            "plane_reads": cp.total_plane_reads,
+            "agg_plane_reads": cp.agg_plane_reads,
+            "source_plane_reads": cp.source_plane_reads,
+            "linked_key": None, "pim_s": pim_s}
 
 
 def avg_value(pair) -> Optional[float]:
@@ -436,60 +774,6 @@ def avg_value(pair) -> Optional[float]:
         return None
     s, c = pair
     return s / c
-
-
-# Result columns that are derived money at cents x percent scale.
-_REVENUE_COLS = {"revenue", "promo_revenue"}
-
-
-@dataclasses.dataclass
-class QueryResult:
-    """Full end-to-end result rows of one query (PIM + host stages).
-
-    ``rows`` hold the exact PIM-encoded integers (``None`` for empty
-    min/max/avg) the oracle comparison uses; ``decoded_rows`` applies the
-    schema's presentation decoding (currency, ISO dates, dictionary
-    strings).
-    """
-    name: str
-    columns: Tuple[str, ...]
-    rows: List[tuple]
-    pim_s: float
-    host_s: float
-    materialized_rows: Dict[str, int]
-
-    @classmethod
-    def from_table(cls, spec, table: "E.HostTable", pim_s: float,
-                   host_s: float, mat_rows: Dict[str, int]) -> "QueryResult":
-        def cell(v):
-            if v is None:
-                return None
-            if isinstance(v, (float, np.floating)):   # host-stage avg
-                return float(v)
-            return int(v)
-
-        cols = tuple(table.columns)
-        rows = [tuple(cell(table.columns[c][i]) for c in cols)
-                for i in range(table.n_rows)]
-        return cls(spec.name, cols, rows, pim_s, host_s, dict(mat_rows))
-
-    def decoded_rows(self) -> List[tuple]:
-        out = []
-        for row in self.rows:
-            dec = []
-            for c, v in zip(self.columns, row):
-                if v is None:
-                    dec.append(None)
-                elif c in _REVENUE_COLS:
-                    dec.append(S.decode_revenue(v))
-                else:
-                    dec.append(S.decode_value(c, v))
-            out.append(tuple(dec))
-        return out
-
-    @property
-    def total_materialized(self) -> int:
-        return sum(self.materialized_rows.values())
 
 
 def predicate_attrs_of_expr(e) -> List[str]:

@@ -41,6 +41,25 @@ class QuerySpec:
     # materialization feed this plan; None = the paper's filter-only scope.
     host: Optional[E.HostStage] = None
 
+    def filter_only(self) -> "QuerySpec":
+        """The paper-scope copy of this spec: PIM filters, groups and
+        aggregates only, host stage dropped. ``PimDatabase.execute``
+        routes on ``host``, so this is how a caller asks for the mask/
+        aggregate run of a query that also ships a host stage (the old
+        ``run_pim`` behaviour)."""
+        if self.host is None:
+            return self
+        return dataclasses.replace(self, host=None)
+
+    def pim_relations(self) -> Tuple[str, ...]:
+        """Names of the PIM relations this spec's array stage touches —
+        the filtered relations, plus (for end-to-end specs) every
+        scan-all relation the host plan materializes. Serving-layer
+        result caches key on these relations' content versions."""
+        if self.host is None:
+            return tuple(self.filters)
+        return tuple(rel for rel, _, _ in E.split_query(self)[0])
+
 
 def _q1() -> QuerySpec:
     cutoff = D("1998-12-01") - 90

@@ -1,14 +1,20 @@
-"""Batched serving driver: prefill + decode loop with KV caches.
+"""Serving drivers: LM decode loop + PIMDB query-trace replay.
 
-serve(cfg, mesh): builds the pjit'd decode step (launch/steps.py shards
-the cache per DESIGN §6 — batch over dp, long sequences over 'model'),
-greedy-decodes a batch of requests, and reports tokens/s. Request
-admission can be gated by a PIMDB bulk-bitwise filter over request
-metadata (analytics-guided serving, see examples/).
+``--mode lm`` (default): builds the pjit'd decode step (launch/steps.py
+shards the cache per DESIGN §6 — batch over dp, long sequences over
+'model'), greedy-decodes a batch of requests, and reports tokens/s.
+
+``--mode db``: replays a query trace (comma-separated TPC-H names, with
+``xN`` repeats, e.g. ``Q1,Q6x3,Q3``) through the async
+``repro.serve.QueryService`` at fixed concurrency, and reports qps,
+p50/p99 latency, dispatch/plane-read totals and cache behaviour — the
+throughput rung of the ROADMAP serving item.  ``--compare`` also runs
+the same trace as a sequential ``db.execute`` loop for the speedup.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -48,13 +54,108 @@ def serve(cfg, batch: int, prompt_len: int, gen_len: int, mesh=None):
     return seq, batch * (max_len - 1) / dt
 
 
+# -- PIMDB query-trace replay ------------------------------------------------
+DEFAULT_TRACE = "Q1,Q6,Q14,Q3,Q12,Q6,Q14,Q1,Q6,Q19,Q3,Q6,Q14,Q12,Q1,Q6"
+
+
+def parse_trace(trace: str):
+    """``Q1,Q6x3,Q3`` -> [Q1, Q6, Q6, Q6, Q3] QuerySpecs."""
+    from repro.db import queries
+    specs = []
+    for tok in trace.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        name, _, rep = tok.partition("x")
+        specs.extend(queries.get_query(name) for _ in range(int(rep or 1)))
+    return specs
+
+
+def serve_trace(db, specs, *, concurrency: int = 8, max_window: int = 8,
+                max_wait_s: float = 0.002, cache_capacity: int = 256):
+    """Replay ``specs`` through a QueryService at fixed concurrency.
+    Returns (results in trace order, service stats, wall seconds)."""
+    from repro.serve import QueryService
+
+    async def run():
+        svc = QueryService(db, max_window=max_window, max_wait_s=max_wait_s,
+                           cache_capacity=cache_capacity,
+                           max_pending=max(concurrency, max_window))
+        gate = asyncio.Semaphore(concurrency)
+
+        async def one(spec):
+            async with gate:
+                return await svc.submit(spec)
+
+        async with svc:
+            t0 = time.perf_counter()
+            results = await asyncio.gather(*[one(s) for s in specs])
+            wall = time.perf_counter() - t0
+            stats = svc.stats()
+        return results, stats, wall
+
+    return asyncio.run(run())
+
+
+def serve_db_main(args) -> None:
+    from repro.db import Engine, PimDatabase, tpch
+
+    tables = tpch.generate(sf=args.sf, seed=args.seed)
+    db = PimDatabase(tables, backend=args.backend)
+    specs = parse_trace(args.trace)
+    print(f"replaying {len(specs)} queries (sf={args.sf}, "
+          f"backend={args.backend}, concurrency={args.concurrency}, "
+          f"window={args.window}, max_wait={args.max_wait_ms}ms)")
+    # Warm the executable cache so the replay measures serving, not XLA.
+    serve_trace(db, specs, concurrency=args.concurrency,
+                max_window=args.window,
+                max_wait_s=args.max_wait_ms / 1e3)
+    results, stats, wall = serve_trace(
+        db, specs, concurrency=args.concurrency, max_window=args.window,
+        max_wait_s=args.max_wait_ms / 1e3)
+    lat = stats["latency_ms"]
+    print(f"served {len(results)} queries in {wall * 1e3:.1f} ms "
+          f"({len(results) / wall:.1f} qps)")
+    print(f"latency p50={lat['p50']:.2f}ms p99={lat['p99']:.2f}ms "
+          f"mean={lat['mean']:.2f}ms")
+    print(f"dispatches={stats['dispatches']} "
+          f"plane_reads={stats['plane_reads']} "
+          f"coalesced={stats['coalesced']} cache={stats['cache']}")
+    print(f"batcher={stats['batcher']}")
+    if args.compare:
+        for s in specs:
+            db.execute(s, engine=Engine.FUSED)      # warm
+        t0 = time.perf_counter()
+        seq = [db.execute(s, engine=Engine.FUSED) for s in specs]
+        seq_wall = time.perf_counter() - t0
+        for r, sr in zip(results, seq):
+            assert (r.rows == sr.rows and
+                    r.aggregates == sr.aggregates), r.name
+        print(f"sequential execute loop: {seq_wall * 1e3:.1f} ms "
+              f"({len(specs) / seq_wall:.1f} qps) -> "
+              f"service speedup {seq_wall / wall:.2f}x (bit-parity ok)")
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "db"), default="lm")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sf", type=float, default=0.005)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "pallas"))
+    ap.add_argument("--trace", default=DEFAULT_TRACE)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--compare", action="store_true")
     args = ap.parse_args()
+    if args.mode == "db":
+        serve_db_main(args)
+        return
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     seq, tps = serve(cfg, args.batch, 1, args.gen_len)
     print(f"decoded {seq.shape} at {tps:.1f} tok/s")

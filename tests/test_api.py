@@ -1,0 +1,225 @@
+"""Unified ``PimDatabase.execute`` API: Engine enum routing, uniform
+QueryResult, deprecated-shim parity on all 19 TPC-H queries, and the
+empty/single-batch regressions."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.db as db_pkg
+import repro.serve as serve_pkg
+from repro.db import database, queries, tpch
+from repro.db.database import Engine, PimDatabase, QueryResult
+
+# Same generator parameters as test_fusion.py / test_queries.py so the
+# compiled-executable cache is shared across modules.
+SF, SEED = 0.002, 123
+_CACHE: dict = {}
+
+
+def _get_db(backend: str = "jnp") -> PimDatabase:
+    if "tables" not in _CACHE:
+        _CACHE["tables"] = tpch.generate(sf=SF, seed=SEED)
+    if backend not in _CACHE:
+        _CACHE[backend] = PimDatabase(_CACHE["tables"], backend=backend)
+    return _CACHE[backend]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return _get_db("jnp")
+
+
+# --------------------------------------------------------------------------
+# Engine enum
+# --------------------------------------------------------------------------
+def test_engine_coerce():
+    assert Engine.coerce(Engine.ORACLE) is Engine.ORACLE
+    assert Engine.coerce("fused") is Engine.FUSED
+    assert Engine.coerce("EAGER") is Engine.EAGER
+    assert Engine.coerce("oracle") is Engine.ORACLE
+    # Legacy fused= bool.
+    assert Engine.coerce(True) is Engine.FUSED
+    assert Engine.coerce(False) is Engine.EAGER
+    with pytest.raises(ValueError):
+        Engine.coerce("warp")
+
+
+def test_public_all_surfaces():
+    for name in db_pkg.__all__:
+        assert getattr(db_pkg, name, None) is not None, name
+    for must in ("PimDatabase", "Engine", "QueryResult", "cost_report"):
+        assert must in db_pkg.__all__
+    for name in serve_pkg.__all__:
+        assert getattr(serve_pkg, name, None) is not None, name
+    for must in ("QueryService", "AdmissionBatcher", "ResultCache",
+                 "spec_cache_key"):
+        assert must in serve_pkg.__all__
+
+
+# --------------------------------------------------------------------------
+# Uniform QueryResult
+# --------------------------------------------------------------------------
+def test_query_result_uniform_fields(db):
+    q6 = queries.get_query("Q6")
+    q3 = queries.get_query("Q3")
+    for res in (db.execute(q6), db.execute(q6, engine=Engine.EAGER),
+                db.execute(q6, engine=Engine.ORACLE), db.execute(q3),
+                db.execute(q3, engine=Engine.ORACLE)):
+        assert isinstance(res, QueryResult)
+        for field in ("aggregates", "relations", "columns", "rows",
+                      "pim_s", "host_s", "wall_s", "materialized_rows",
+                      "batch_stats", "cached", "engine"):
+            assert hasattr(res, field), field
+        assert res.name in ("Q6", "Q3")
+        assert res.kind in ("full", "filter")
+        assert res.wall_time_s == res.wall_s      # legacy alias
+    # QueryRun is the legacy alias of the unified type.
+    assert database.QueryRun is QueryResult
+
+
+def test_oracle_engine_runs_host_stage(db):
+    q3 = queries.get_query("Q3")
+    fused = db.execute(q3)
+    oracle = db.execute(q3, engine=Engine.ORACLE)
+    assert oracle.engine is Engine.ORACLE
+    assert oracle.columns == fused.columns
+    assert oracle.rows == fused.rows
+    assert oracle.pim_s == 0.0
+
+
+# --------------------------------------------------------------------------
+# Deprecated shims: warn AND return identical results (all 19 queries)
+# --------------------------------------------------------------------------
+def test_shim_parity_all_19_queries(db):
+    specs = queries.all_queries()
+    assert len(specs) == 19
+    for spec in specs:
+        new_pim = db.execute(spec.filter_only())
+        with pytest.warns(DeprecationWarning):
+            old_pim = db.run_pim(spec)
+        assert old_pim.aggregates == new_pim.aggregates, spec.name
+        assert set(old_pim.relations) == set(new_pim.relations)
+        for r in spec.filters:
+            assert (old_pim.relations[r].mask
+                    == new_pim.relations[r].mask).all(), spec.name
+        if spec.host is not None:
+            new_e2e = db.execute(spec)
+            with pytest.warns(DeprecationWarning):
+                old_e2e = db.run_query(spec)
+            assert old_e2e.columns == new_e2e.columns, spec.name
+            assert old_e2e.rows == new_e2e.rows, spec.name
+            assert (old_e2e.materialized_rows
+                    == new_e2e.materialized_rows), spec.name
+
+
+def test_shim_parity_batch(db):
+    specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
+    new = db.execute(specs)
+    new_stats = db.last_batch_stats
+    with pytest.warns(DeprecationWarning):
+        old = db.run_queries(specs)
+    old_stats = db.last_batch_stats
+    for spec, o, n in zip(specs, old, new):
+        if spec.host is not None:
+            assert o.rows == n.rows, spec.name
+        else:
+            assert o.aggregates == n.aggregates, spec.name
+    assert old_stats["n_dispatches"] == new_stats["n_dispatches"]
+    for r in new_stats["relations"]:
+        assert (old_stats["relations"][r]["plane_reads"]
+                == new_stats["relations"][r]["plane_reads"])
+
+
+def test_shim_eager_parity(db):
+    q6 = queries.get_query("Q6")
+    new = db.execute(q6, engine=Engine.EAGER)
+    with pytest.warns(DeprecationWarning):
+        old = db.run_pim(q6, fused=False)
+    assert old.aggregates == new.aggregates
+    assert (old.relations["lineitem"].mask
+            == new.relations["lineitem"].mask).all()
+
+
+# --------------------------------------------------------------------------
+# Engine parity (FUSED == EAGER == ORACLE)
+# --------------------------------------------------------------------------
+def test_engine_parity_aggregates(db):
+    q1 = queries.get_query("Q1")
+    fused = db.execute(q1)
+    eager = db.execute(q1, engine=Engine.EAGER)
+    oracle = db.execute(q1, engine=Engine.ORACLE)
+    assert fused.aggregates == eager.aggregates == oracle.aggregates
+    assert fused.engine is Engine.FUSED
+    assert eager.engine is Engine.EAGER
+
+
+def test_string_engine_accepted(db):
+    q6 = queries.get_query("Q6")
+    assert (db.execute(q6, engine="eager").aggregates
+            == db.execute(q6, engine="fused").aggregates)
+
+
+# --------------------------------------------------------------------------
+# Batch edge cases (the run_queries regression fix)
+# --------------------------------------------------------------------------
+def test_execute_empty_list(db):
+    assert db.execute([]) == []
+    stats = db.last_batch_stats
+    assert stats["n_queries"] == 0 and stats["n_dispatches"] == 0
+    with pytest.warns(DeprecationWarning):
+        assert db.run_queries([]) == []
+
+
+def test_execute_single_element_list(db):
+    q6 = queries.get_query("Q6")
+    direct = db.execute(q6)
+    batch = db.execute([q6])
+    assert isinstance(batch, list) and len(batch) == 1
+    assert batch[0].aggregates == direct.aggregates
+    # The singleton takes the direct path: one query, no linking.
+    stats = db.last_batch_stats
+    assert stats["n_queries"] == 1
+    assert all(rs["instrs_deduped"] == 0
+               for rs in stats["relations"].values())
+    with pytest.warns(DeprecationWarning):
+        shim = db.run_queries([q6])
+    assert len(shim) == 1 and shim[0].aggregates == direct.aggregates
+    # Host-bearing singleton too.
+    q3 = queries.get_query("Q3")
+    one = db.execute([q3])
+    assert len(one) == 1 and one[0].rows == db.execute(q3).rows
+
+
+def test_single_batch_stats_populated(db):
+    """FUSED singles must populate last_batch_stats (the bench and the
+    serving layer read dispatch/plane-read counters for singles too)."""
+    q14 = queries.get_query("Q14")
+    db.execute(q14)
+    stats = db.last_batch_stats
+    assert stats["n_queries"] == 1
+    assert stats["n_dispatches"] == len(stats["relations"]) > 0
+    for rs in stats["relations"].values():
+        assert rs["plane_reads"] > 0
+
+
+def test_split_phase_dispatch_then_finish(db):
+    specs = [queries.get_query(n) for n in ("Q6", "Q3")]
+    pendings, stats = db.dispatch_batch(specs)
+    assert stats["n_queries"] == 2
+    assert not pendings[0].needs_host and pendings[1].needs_host
+    want = db.execute(queries.get_query("Q3"))
+    got = db.finish_query(pendings[1])
+    assert got.rows == want.rows
+    assert db.finish_query(pendings[0]).aggregates \
+        == db.execute(queries.get_query("Q6")).aggregates
+
+
+def test_bump_version_monotonic(db):
+    v0 = db.relations["part"].version
+    assert db.bump_version("part") == v0 + 1
+    assert db.relations["part"].version == v0 + 1
+    # Content (and results) unaffected — version is pure metadata.
+    q14 = queries.get_query("Q14")
+    assert (db.execute(q14).rows
+            == db.execute(q14, engine=Engine.ORACLE).rows)

@@ -145,6 +145,9 @@ def test_namespaced_compilers_do_not_collide(db):
 # --------------------------------------------------------------------------
 def _assert_batch_matches_sequential(dbx, specs):
     batch = dbx.run_queries(specs)
+    # Snapshot before the sequential reruns below (every FUSED execute —
+    # batch or single — refreshes last_batch_stats).
+    stats = dbx.last_batch_stats
     for spec, got in zip(specs, batch):
         if spec.host is not None:
             want = dbx.run_query(spec)
@@ -158,7 +161,7 @@ def _assert_batch_matches_sequential(dbx, specs):
                 np.testing.assert_array_equal(
                     got.relations[rel].mask, want.relations[rel].mask,
                     err_msg=f"{spec.name}/{rel}")
-    return batch
+    return batch, stats
 
 
 def test_q1_q6_q14_batch_all_paths(db, db_pallas):
@@ -166,7 +169,7 @@ def test_q1_q6_q14_batch_all_paths(db, db_pallas):
     lineitem, plane reads sublinear, results bit-identical to the
     sequential paths AND the eager/numpy oracles, jnp and pallas."""
     specs = [queries.get_query(n) for n in ("Q1", "Q6", "Q14")]
-    batch = _assert_batch_matches_sequential(db, specs)
+    batch, stats = _assert_batch_matches_sequential(db, specs)
     _assert_batch_matches_sequential(db_pallas, specs)
 
     # Eager + numpy oracles for the two aggregate queries.
@@ -176,7 +179,6 @@ def test_q1_q6_q14_batch_all_paths(db, db_pallas):
         assert batch[i].aggregates == eager.aggregates
         assert batch[i].aggregates == base.aggregates
 
-    stats = db.last_batch_stats
     assert stats["n_queries"] == 3
     # ONE logical dispatch per touched relation: lineitem + part, not 4.
     assert stats["n_dispatches"] == 2
