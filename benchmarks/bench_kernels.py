@@ -19,7 +19,12 @@ async serving frontend (``serve_concurrent``: a 32-request trace at
 concurrency 8 through ``repro.serve.QueryService`` — admission-window
 linking, in-flight coalescing, and the version-keyed result cache must
 deliver >= 2x the queries/sec of a sequential ``db.execute`` loop, at
-bit-parity, with p50/p99 and plane reads reported).
+bit-parity, with p50/p99 and plane reads reported), and the HTAP
+streaming scenario (``htap_stream``: trickle INSERT/DELETE batches
+through ``QueryService.apply`` interleaved with Q1/Q6 analytics — Q6 at
+bit-parity with a NumPy mutable-table oracle, no stale cached result
+ever served, and the rotation wear-leveling policy's busiest-row cell
+writes <= 0.5x a first-fit replay of the same mutation trace).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -177,6 +182,7 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
     rows.extend(bench_verify(db))
     rows.extend(bench_concurrent(db))
     rows.extend(bench_serve(db))
+    rows.extend(bench_htap_stream(sf))
     return rows
 
 
@@ -316,6 +322,109 @@ def bench_serve(db) -> List[dict]:
                  windows=stats["batcher"]["windows"],
                  sequential_us=round(seq_us),
                  exact=parity and qps >= 2 * qps_seq)]
+
+
+def bench_htap_stream(sf: float = DEFAULT_SF) -> List[dict]:
+    """HTAP streaming scenario (``repro.dml`` + ``repro.serve``): a
+    rolling staging buffer on ``lineitem`` — each round INSERTs a fresh
+    batch and DELETEs the previous round's batch through
+    ``QueryService.apply``, interleaved with Q1/Q6 analytics submitted
+    through the same service.  ``exact`` asserts (a) bit-parity of every
+    Q6 against an independent NumPy mutable-table oracle driven by the
+    same mutation stream (and Q1 against the numpy baseline), (b) no
+    post-mutation query is ever served from the result cache (versions
+    invalidate by construction), and (c) the wear-leveling acceptance
+    bar: the rotation allocator's busiest-row cell writes stay <= 0.5x
+    a first-fit replay of the identical mutation trace.  Uses a FRESH
+    database so the mutations never leak into the rows above."""
+    import asyncio
+
+    from repro.core import bitslice as bs
+    from repro.db import database, queries, tpch
+    from repro.dml import Delete, Insert, MutableTable, replay
+    from repro.serve import QueryService
+
+    db = database.PimDatabase(tpch.generate(sf=sf, seed=0))
+    q1 = queries.get_query("Q1").filter_only()
+    q6 = queries.get_query("Q6").filter_only()
+    spec6 = queries.get_query("Q6")
+    oracle = MutableTable(db.tables["lineitem"])
+    src = {a: np.asarray(c) for a, c in db.tables["lineitem"].items()}
+    n0 = oracle.n_rows
+    rng = np.random.default_rng(7)
+    K, rounds = 64, 6
+    cells = {"written": 0}
+
+    def batch_rows():
+        idx = rng.integers(0, n0, K)
+        return {a: c[idx] for a, c in src.items()}
+
+    def replay_stream():
+        async def run():
+            svc = QueryService(db, max_window=4, max_wait_s=0.001)
+            parity = True
+            prev_ids: List[int] = []
+            async with svc:
+                t0 = time.perf_counter()
+                for _ in range(rounds):
+                    rows_in = batch_rows()
+                    muts = [Insert("lineitem", rows_in)]
+                    if prev_ids:
+                        muts.append(Delete("lineitem", row_ids=prev_ids))
+                    st = await svc.apply(muts)
+                    cells["written"] += st["lineitem"]["cells_written"]
+                    new_ids = oracle.insert(rows_in)
+                    if prev_ids:
+                        oracle.delete(row_ids=prev_ids)
+                    prev_ids = new_ids
+                    r1 = await svc.submit(q1)
+                    r6 = await svc.submit(q6)
+                    exp = oracle.aggregate(spec6.filters["lineitem"],
+                                           spec6.aggregates)
+                    got = tuple(r6.aggregates["all"][a.name]
+                                for a in spec6.aggregates)
+                    parity = (parity and exp == got
+                              and not r1.cached and not r6.cached
+                              and r1.aggregates
+                              == db.run_baseline(q1).aggregates)
+                wall = time.perf_counter() - t0
+            return r6, parity, svc.stats(), wall
+
+        return asyncio.run(run())
+
+    t0 = time.perf_counter()
+    replay_stream()
+    cold = (time.perf_counter() - t0) * 1e6
+    reps = 3
+    walls = []
+    for _ in range(reps):
+        r6, parity, stats, wall = replay_stream()
+        walls.append(wall * 1e6)
+    warm = sum(walls) / reps
+
+    d = db.dml_state("lineitem")
+    leveled = d.segments.busiest_row_ops()
+    unleveled = replay(d.segments.events,
+                       bs.pad_words(n0) * bs.WORD_BITS, n0,
+                       "first_fit").busiest_row_ops()
+    ratio = leveled / unleveled if unleveled else 1.0
+    rep = db.report(r6)
+    n_queries = 2 * rounds
+    return [_row("htap_stream", warm, cold,
+                 rounds=rounds, batch=K,
+                 qps=round(n_queries / (warm / 1e6)),
+                 dispatches=stats["dispatches"],
+                 plane_reads=stats["plane_reads"],
+                 mutations=stats["mutations"],
+                 cells_written=cells["written"],
+                 busiest_row_ops=round(leveled),
+                 busiest_row_ops_unleveled=round(unleveled),
+                 wear_ratio_x1000=round(ratio * 1000),
+                 endurance_ops_cell_10y=round(
+                     rep.endurance_ops_per_cell_10y),
+                 bytes_resident=rep.bytes_resident,
+                 bytes_reserved=rep.bytes_reserved,
+                 exact=bool(parity) and ratio <= 0.5)]
 
 
 def bench_verify(db) -> List[dict]:

@@ -13,7 +13,11 @@ bit-parity with the sequential paths or a ratio above 1.6x the
 costliest single query), the async serving row (``serve_concurrent``:
 dispatch/plane-read totals and p99 tail latency of the concurrency-8
 trace replay, with the >= 2x qps-vs-sequential bar hard-failing via
-``meta.exact``), and — promoted from tabulated to gated since
+``meta.exact``), the HTAP streaming row (``htap_stream``: warm wall,
+dispatch/plane-read totals and the wear-leveling allocator's
+busiest-row write count, with mutable-oracle bit-parity and the
+<= 0.5x-of-first-fit wear bar hard-failing via ``meta.exact``), and —
+promoted from tabulated to gated since
 the carry-save arithmetic PR — per-query cold XLA compile latency. The
 full per-row compile-latency table still prints every run, so the trend
 the ROADMAP tracks has a visible trajectory in every CI log.
@@ -78,6 +82,15 @@ GATES = [
     ("serve_concurrent", "meta.p99_ms", "time"),
     ("serve_concurrent", "meta.dispatches", "count"),
     ("serve_concurrent", "meta.plane_reads", "count"),
+    # HTAP streaming (repro.dml): interleaved DML + analytics through the
+    # service. Counters are deterministic (seeded mutation stream, fixed
+    # rounds); busiest_row_ops growing past 1.5x means the wear-leveling
+    # allocator regressed — and the <= 0.5x-of-first-fit acceptance bar
+    # plus oracle bit-parity hard-fail via meta.exact.
+    ("htap_stream", "warm_us", "time"),
+    ("htap_stream", "meta.dispatches", "count"),
+    ("htap_stream", "meta.plane_reads", "count"),
+    ("htap_stream", "meta.busiest_row_ops", "count"),
 ]
 
 

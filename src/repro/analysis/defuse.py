@@ -89,8 +89,13 @@ def run(ctx: PassContext) -> List[Diagnostic]:
                             i, kind, ins.mask))
 
         # -- destination bookkeeping --------------------------------------
+        # DML write kinds program relation storage, not a register: the
+        # dest is an attribute (or the valid plane) by design, so the
+        # shadow/duplicate/dead-register bookkeeping does not apply —
+        # the kinds pass validates the target instead.
+        is_write = kind in ("PlaneWrite", "ValidClear")
         dest = ins.dest
-        if i not in batched or i in batch_at:
+        if not is_write and (i not in batched or i in batch_at):
             if dest in defined and dest != "__valid__":
                 diags.append(_d("warning",
                                 f"duplicate dest '{dest}' (first defined at "

@@ -239,6 +239,33 @@ def run(ctx: PassContext) -> List[Diagnostic]:
                                 f"column-transform mask '{ins.mask}' is "
                                 f"{km}, not a mask register", i, k,
                                 ins.mask))
+        elif k in ("PlaneWrite", "ValidClear"):
+            # DML write kinds target relation STORAGE, not a register:
+            # dest must be a source attribute (PlaneWrite) or the valid
+            # plane; no kind/width registration happens.
+            if k == "ValidClear" or ins.dest == "__valid__":
+                if ins.dest != "__valid__":
+                    diags.append(_d("error",
+                                    f"ValidClear dest '{ins.dest}' must be "
+                                    "'__valid__'", i, k, ins.dest))
+            elif not ctx.is_source(ins.dest):
+                diags.append(_d("error",
+                                f"PlaneWrite dest '{ins.dest}' is not a "
+                                "relation attribute (writes program "
+                                "storage, not registers)", i, k, ins.dest))
+            elif ins.n_bits != ctx.source_widths[ins.dest]:
+                diags.append(_d("warning",
+                                f"n_bits={ins.n_bits} but attribute "
+                                f"'{ins.dest}' spans "
+                                f"{ctx.source_widths[ins.dest]} planes: "
+                                "write cost and endurance accounting "
+                                "drift", i, k, ins.dest))
+            if k == "PlaneWrite" and len(ins.rows) != len(ins.values):
+                diags.append(_d("error",
+                                f"PlaneWrite rows ({len(ins.rows)}) and "
+                                f"values ({len(ins.values)}) disagree",
+                                i, k, ins.dest))
+            continue
         else:
             diags.append(_d("error", f"unknown instruction kind {k!r}",
                             i, k, ins.dest))

@@ -152,12 +152,49 @@ def collect_serve_programs(db: PimDatabase) -> List[Program]:
     return programs
 
 
+def collect_dml_programs(db: PimDatabase) -> List[Program]:
+    """DML-generated write programs (``repro.dml``): a representative
+    insert / predicate delete / in-place update / compact on each of two
+    relations, captured exactly as ``RelationDml`` emitted (and ran)
+    them — so the PlaneWrite/ValidClear validation in the kinds pass and
+    the write-aware def-use schedule gate the mutation path too."""
+    import numpy as np
+
+    from repro.db.queries import get_query
+
+    programs: List[Program] = []
+    for rel_name in ("lineitem", "customer"):
+        d = db.dml_state(rel_name)
+        cols = db.tables[rel_name]
+        take = {a: np.asarray(c[:8]) for a, c in cols.items()}
+        snap = []
+
+        def emit(op):
+            snap.append((f"dml/{rel_name}/{op}", d.rel))
+
+        emit("insert")
+        d.insert(take)
+        emit("delete")
+        d.delete(row_ids=d.live_ids()[:4])
+        if rel_name == "lineitem":
+            emit("update")
+            pred = get_query("Q6").filters["lineitem"]
+            d.update({"l_quantity": 7}, pred=pred)
+        emit("compact")
+        d.compact()
+        # Pair each captured (label, relation-at-emit-time) with the
+        # program RelationDml recorded for that mutation.
+        for (label, rel), (_, instrs) in zip(snap, d.programs):
+            programs.append((label, rel, instrs, ()))
+    return programs
+
+
 def lint(sf: float = 0.002, strict: bool = False,
          verbose: bool = False) -> int:
     t0 = time.perf_counter()
     db = PimDatabase(tpch.generate(sf=sf, seed=0))
     programs = (collect_programs(db) + collect_linked_programs(db)
-                + collect_serve_programs(db))
+                + collect_serve_programs(db) + collect_dml_programs(db))
 
     totals = {"error": 0, "warning": 0, "info": 0}
     n_checked = 0

@@ -129,10 +129,24 @@ class RelationLayout:
     """
     attributes: Dict[str, AttributeLayout]
     n_records: int
+    # Reserved append-segment capacity in words (tile multiples), set by
+    # the DML layer. ``n_records`` stays the *logical* record count; the
+    # plane arrays span the capacity and the gap is masked by the valid
+    # plane, so within-capacity inserts never change ``n_words`` — the
+    # compiled-executable cache signature stays warm until a segment
+    # growth deliberately changes it.
+    capacity_words: int | None = None
 
     @property
     def n_words(self) -> int:
-        return pad_words(self.n_records)
+        base = pad_words(self.n_records)
+        if self.capacity_words is None:
+            return base
+        return max(base, self.capacity_words)
+
+    @property
+    def capacity_records(self) -> int:
+        return self.n_words * WORD_BITS
 
     @property
     def n_tiles(self) -> int:

@@ -78,26 +78,35 @@ class ProgramCost:
     cycles_col_transform: int = 0
     cycles_reduce_col: int = 0
     cycles_reduce_row: int = 0
+    cycles_write: int = 0
     intermediate_cells_peak: int = 0
     n_instructions: int = 0
+    # DML write kinds only: cells persistently programmed (not cycles —
+    # excluded from cycles_total's compute split, summed separately so
+    # the energy model can charge xbar_write_energy_per_bit per cell).
+    cells_written: int = 0
 
     @property
     def cycles_total(self) -> int:
         return (self.cycles_filter + self.cycles_arith +
                 self.cycles_col_transform + self.cycles_reduce_col +
-                self.cycles_reduce_row)
+                self.cycles_reduce_row + self.cycles_write)
 
     def breakdown(self) -> Dict[str, int]:
         return dict(filter=self.cycles_filter, arith=self.cycles_arith,
                     col_transform=self.cycles_col_transform,
                     reduce_col=self.cycles_reduce_col,
-                    reduce_row=self.cycles_reduce_row)
+                    reduce_row=self.cycles_reduce_row,
+                    write=self.cycles_write)
 
 
 _FILTER_KINDS = {"EqualImm", "NotEqualImm", "LessThanImm", "GreaterThanImm",
                  "Equal", "LessThan", "BitwiseAnd", "BitwiseOr", "BitwiseNot",
                  "SetReset"}
 _ARITH_KINDS = {"AddImm", "Add", "Subtract", "Multiply"}
+# DML write kinds (repro.dml): persistent data-cell programming, the
+# §6.4 endurance evaluation's write side.
+_WRITE_KINDS = {"PlaneWrite", "ValidClear"}
 
 # Lowering-internal op kinds of the carry-save arithmetic pipeline
 # (core.program.plan_arith). These exist only in how the TPU backends
@@ -173,6 +182,9 @@ def classify_program(trace: Sequence[isa.PimInstruction]) -> ProgramCost:
         elif k in ("ReduceSum", "ReduceMinMax"):
             cost.cycles_reduce_row += ins.row_cycles()
             cost.cycles_reduce_col += c - ins.row_cycles()
+        elif k in _WRITE_KINDS:
+            cost.cycles_write += c
+            cost.cells_written += ins.cells_written()
         else:
             raise ProgramVerificationError.single(
                 "classify_program",
@@ -279,11 +291,14 @@ class QueryEnergy:
     host_j: float
     dram_j: float
     baseline_j: float
+    # DML cell-programming energy (xbar_write_energy_per_bit per cell);
+    # zero for read-only analytics, so the field defaults.
+    pim_write_j: float = 0.0
 
     @property
     def pimdb_total_j(self) -> float:
         return (self.pim_logic_j + self.pim_read_j + self.pim_controller_j +
-                self.host_j + self.dram_j)
+                self.host_j + self.dram_j + self.pim_write_j)
 
     @property
     def saving(self) -> float:
@@ -309,7 +324,8 @@ def query_energy(cost: ProgramCost, timing: QueryTiming, n_crossbars: int,
     dram = hw.dram_standby_power * timing.pimdb_total_s
     base = (timing.baseline_read_bytes * hw.dram_energy_per_byte +
             (hw.host_active_power + hw.dram_standby_power) * timing.baseline_time_s)
-    return QueryEnergy(logic, read, ctrl, host, dram, base)
+    write = cost.cells_written * hw.xbar_write_energy_per_bit
+    return QueryEnergy(logic, read, ctrl, host, dram, base, write)
 
 
 # --------------------------------------------------------------------------

@@ -390,6 +390,54 @@ def reduce_max(planes: jnp.ndarray, mask: jnp.ndarray):
 
 
 # --------------------------------------------------------------------------
+# DML write primitives (repro.dml): row-targeted plane programming.
+# The controller receives (rows, values) in the PIM request (Algorithm 1
+# style — values steer the write phases, they are never staged as a
+# bit-plane) and programs the listed crossbar rows. Here that becomes a
+# word-level masked merge: host-built touch/value bitvectors, one bulk
+# ``(plane & ~touch) | vals`` per plane — sharding- and jit-friendly.
+# --------------------------------------------------------------------------
+def write_touch_mask(rows: np.ndarray, n_words: int) -> np.ndarray:
+    """(W,) uint32 bitvector with the listed record slots set."""
+    rows = np.asarray(rows, np.int64)
+    touch = np.zeros(n_words, np.uint32)
+    if rows.size == 0:
+        return touch
+    word = rows // bitslice.WORD_BITS
+    shift = (rows % bitslice.WORD_BITS).astype(np.uint32)
+    np.bitwise_or.at(touch, word, np.uint32(1) << shift)
+    return touch
+
+
+def plane_write_masks(rows, values, n_bits: int,
+                      n_words: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(touch (W,), vals (n_bits, W)) uint32 masks of one PlaneWrite.
+
+    Rows must be distinct within one instruction (the DML layer dedupes
+    keeping the last write); repeated rows would OR their value bits.
+    """
+    rows = np.asarray(rows, np.int64)
+    touch = write_touch_mask(rows, n_words)
+    vals = np.zeros((n_bits, n_words), np.uint32)
+    if rows.size == 0:
+        return touch, vals
+    v = np.asarray(values, np.uint64)
+    word = rows // bitslice.WORD_BITS
+    shift = (rows % bitslice.WORD_BITS).astype(np.uint32)
+    for b in range(n_bits):
+        bits = ((v >> np.uint64(b)) & np.uint64(1)).astype(np.uint32)
+        np.bitwise_or.at(vals[b], word, bits << shift)
+    return touch, vals
+
+
+def apply_plane_write(planes: jnp.ndarray, touch: np.ndarray,
+                      vals: np.ndarray) -> jnp.ndarray:
+    """Masked merge of new row values into an (n_bits, W) plane stack."""
+    t = jnp.asarray(touch)
+    return (planes & ~t[None, :]) | jnp.asarray(vals)
+
+
+# --------------------------------------------------------------------------
 # Relation store + executor
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -425,7 +473,20 @@ class PimRelation:
         return self.layout.attributes[attr].n_bits
 
     def bytes_resident(self) -> int:
-        return sum(int(p.size) * 4 for p in self.planes.values()) + self.valid.size * 4
+        """Device-resident bytes: every attribute plane plus the valid
+        plane, spanning the FULL reserved capacity (``layout.n_words``
+        words per plane) — append segments cost memory whether or not
+        their slots hold records yet. Layout-derived rather than summing
+        array sizes, so the figure stays honest for any capacity state."""
+        return self.layout.row_bits * self.layout.n_words * 4
+
+    def bytes_reserved(self) -> int:
+        """The reserved-but-unused share of ``bytes_resident``: plane
+        bytes of capacity words past the last word any record occupies —
+        the append-segment headroom (tile padding + grown segments) that
+        INSERTs fill before the layout ever has to change."""
+        used = -(-self.layout.n_records // bitslice.WORD_BITS)
+        return self.layout.row_bits * max(0, self.layout.n_words - used) * 4
 
     def bumped(self) -> "PimRelation":
         """A copy with the content version advanced — the handle mutation
@@ -594,6 +655,28 @@ class Engine:
             # the transform is the readout itself. Kept as a traced no-op so
             # the cost model charges the paper's 2050 cycles.
             self.masks[instr.dest] = self.masks[instr.mask]
+        elif kind == "PlaneWrite":
+            W = self.rel.layout.n_words
+            if instr.dest == "__valid__":
+                touch, vals = plane_write_masks(instr.rows, instr.values,
+                                                1, W)
+                valid = (self.rel.valid & ~jnp.asarray(touch)) \
+                    | jnp.asarray(vals[0])
+                self.rel = dataclasses.replace(self.rel, valid=valid)
+                self.masks["__valid__"] = valid
+            else:
+                p = self.rel.planes[instr.dest]
+                touch, vals = plane_write_masks(instr.rows, instr.values,
+                                                p.shape[0], W)
+                planes = dict(self.rel.planes)
+                planes[instr.dest] = apply_plane_write(p, touch, vals)
+                self.rel = dataclasses.replace(self.rel, planes=planes)
+        elif kind == "ValidClear":
+            touch = write_touch_mask(np.asarray(instr.rows),
+                                     self.rel.layout.n_words)
+            valid = self.rel.valid & ~jnp.asarray(touch)
+            self.rel = dataclasses.replace(self.rel, valid=valid)
+            self.masks["__valid__"] = valid
         else:
             raise ValueError(f"unknown instruction {kind}")
 

@@ -54,6 +54,12 @@ class PimInstruction:
         """
         return float(self.col_cycles())
 
+    def cells_written(self) -> int:
+        """Total memory cells this instruction *persistently* programs
+        (DML write kinds only — compute kinds write intermediates, which
+        the endurance model already charges via ``row_write_ops``)."""
+        return 0
+
     @property
     def kind(self) -> str:
         return type(self).__name__
@@ -363,6 +369,69 @@ class ColumnTransform(PimInstruction):
 
     def row_write_ops(self) -> float:
         return self.cycles() / 1024.0
+
+
+# --------------------------------------------------------------------------
+# DML write kinds (paper §6.4 endurance evaluation: the write side).
+# Unlike the compute kinds above — whose writes land on *intermediate*
+# cells — these persistently program data cells, so they are the write
+# pressure the endurance model exists for. Row ids are *relation-local
+# record indices*; each maps to one crossbar row (1024 records per
+# crossbar, record-major), so distinct rows spread writes and repeated
+# rows concentrate them — exactly what wear-leveling manipulates.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlaneWrite(PimInstruction):
+    """Program ``n_bits`` cells of each listed row of attribute ``dest``
+    (``dest`` is a relation attribute, or ``"__valid__"`` with
+    ``n_bits=1`` to set valid bits on insert). ``values`` carries the
+    encoded integer written per row — trace metadata for the oracle and
+    the eager engine, not a stored bit-plane (the controller streams it
+    in from the request, Algorithm 1 style)."""
+    rows: Tuple[int, ...] = ()
+    values: Tuple[int, ...] = ()
+    n_bits: int = 0
+
+    def cycles(self) -> int:
+        # SET phase + RESET phase per touched row (bipolar ReRAM write).
+        return 2 * len(self.rows)
+
+    def intermediate_cells(self) -> int:
+        return 0
+
+    def row_cycles(self) -> int:
+        return self.cycles()            # row-at-a-time: all row-wise
+
+    def row_write_ops(self) -> float:
+        # Every listed row takes one n_bits-cell write burst; rows are
+        # distinct record slots, so the busiest row sees n_bits writes.
+        return float(self.n_bits) if self.rows else 0.0
+
+    def cells_written(self) -> int:
+        return len(self.rows) * self.n_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidClear(PimInstruction):
+    """Clear the valid bit of each listed row (DELETE). One cell per
+    row: the cheapest possible mutation, which is why deletes are
+    valid-plane clears rather than eager re-packs."""
+    rows: Tuple[int, ...] = ()
+
+    def cycles(self) -> int:
+        return len(self.rows)
+
+    def intermediate_cells(self) -> int:
+        return 0
+
+    def row_cycles(self) -> int:
+        return self.cycles()
+
+    def row_write_ops(self) -> float:
+        return 1.0 if self.rows else 0.0
+
+    def cells_written(self) -> int:
+        return len(self.rows)
 
 
 # Stateful-logic cycle time (Table 3): 30 ns.

@@ -77,6 +77,10 @@ def instruction_reads(ins: isa.PimInstruction) -> List[str]:
         return [ins.src]
     if k == "SetReset":
         return []
+    if k in ("PlaneWrite", "ValidClear"):
+        # DML write kinds: row/value payloads ride in the instruction
+        # itself (Algorithm 1 style) — no register operands.
+        return []
     if k in _REDUCE_KINDS:
         return [ins.attr, ins.mask]
     if k == "Materialize":
@@ -129,6 +133,10 @@ def analyze_program(instrs: Sequence[isa.PimInstruction],
                 if r not in source:
                     source.append(r)
         k = ins.kind
+        if k in ("PlaneWrite", "ValidClear"):
+            # Write kinds target relation storage (an attribute's planes
+            # or the valid plane), not a program register: no dest entry.
+            continue
         if k in _REDUCE_KINDS:
             reg_kind[ins.dest] = "scalar"
             widths[ins.dest] = 0
@@ -153,6 +161,8 @@ def analyze_program(instrs: Sequence[isa.PimInstruction],
     live: Dict[str, int] = {}
     peak = 0
     for i, ins in enumerate(instrs):
+        if ins.kind in ("PlaneWrite", "ValidClear"):
+            continue
         if reg_kind.get(ins.dest) != "scalar":
             live[ins.dest] = widths[ins.dest]
         peak = max(peak, sum(live.values()))

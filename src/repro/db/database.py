@@ -240,10 +240,16 @@ class PimDatabase:
     dispatch per relation (see ``core.distributed``)."""
 
     def __init__(self, tables: Dict[str, Dict[str, np.ndarray]],
-                 backend: str = "jnp", mesh=None, shard_axes=None):
+                 backend: str = "jnp", mesh=None, shard_axes=None,
+                 wear_policy: str = "rotate"):
         self.tables = tables
         self.backend = backend
         self.mesh = mesh
+        # DML write path: slot-allocation policy for append segments
+        # ("rotate" = wear-leveled, "first_fit" = the unleveled strawman)
+        # and lazily-built per-relation mutable state (repro.dml).
+        self.wear_policy = wear_policy
+        self._dml: Dict[str, object] = {}
         if mesh is not None:
             from repro.core import distributed as dist
             self.shard_axes = dist.mesh_shard_axes(mesh, shard_axes)
@@ -684,7 +690,7 @@ class PimDatabase:
                                    for a in spec.aggregates}
             rel_runs[rel_name] = RelationRun(
                 n_records=n, mask=mask, trace=[],
-                selectivity=float(mask.mean()),
+                selectivity=float(mask.mean()) if mask.size else 0.0,
                 filter_attr_bits=[], filter_attr_sels=[], agg_attr_bits=[])
         columns: Tuple[str, ...] = ()
         rows: List[tuple] = []
@@ -702,6 +708,85 @@ class PimDatabase:
                            columns=columns, rows=rows, host_s=host_s,
                            wall_s=time.perf_counter() - t_all,
                            materialized_rows=mat_rows)
+
+    # -- DML (repro.dml): mutable relations ----------------------------------
+    def dml_state(self, rel_name: str):
+        """The lazily-built :class:`repro.dml.RelationDml` of one
+        PIM-resident relation (created on first use; the relation handle
+        is republished with its append-segment capacity pinned, which
+        keeps ``layout.n_words`` — and thus every compiled-executable
+        signature — stable across within-capacity inserts)."""
+        from repro import dml as dml_mod     # lazy: dml imports repro.db
+        d = self._dml.get(rel_name)
+        if d is None:
+            if rel_name not in self.relations:
+                raise KeyError(f"{rel_name!r} is not PIM-resident")
+            d = dml_mod.RelationDml(self.relations[rel_name],
+                                    self.tables[rel_name],
+                                    policy=self.wear_policy)
+            self.relations[rel_name] = d.rel
+            self._dml[rel_name] = d
+        return d
+
+    def apply(self, mutations: Sequence[object]) -> Dict[str, Dict[str, object]]:
+        """Apply a DML batch (``repro.dml`` Insert/Delete/Update/Compact
+        specs) in order and publish the mutated relations.
+
+        Publishing bumps each mutated relation's content version ONCE
+        per batch — serving-layer result caches key on versions, so any
+        cached result computed against pre-mutation contents misses from
+        then on by construction.  ``self.tables`` is re-pointed at the
+        live rows (logical-id order), keeping the numpy oracle/baseline
+        path in lock-step; the dict itself is shallow-copied first
+        because test fixtures share one tables dict across PimDatabase
+        instances.  With a ``mesh``, mutated relations are re-sharded
+        before publishing.  Returns per-relation accounting.
+        """
+        from repro import dml as dml_mod
+        stats: Dict[str, Dict[str, object]] = {}
+        order: List[str] = []
+        for m in mutations:
+            name = dml_mod.mutation_relation(m)
+            st = self.dml_state(name).apply(m)
+            entry = stats.setdefault(name, {
+                "n_mutations": 0, "n_rows": 0, "n_instructions": 0,
+                "cycles": 0, "cells_written": 0})
+            entry["n_mutations"] += 1
+            entry["n_rows"] += st.n_rows
+            entry["n_instructions"] += st.n_instructions
+            entry["cycles"] += st.cycles
+            entry["cells_written"] += st.cells_written
+            if name not in order:
+                order.append(name)
+        self.tables = dict(self.tables)
+        for name in order:
+            d = self._dml[name]
+            version = max(d.rel.version,
+                          self.relations[name].version) + 1
+            rel = dataclasses.replace(d.rel, version=version)
+            if self.mesh is not None:
+                rel = rel.shard(self.mesh, self.shard_axes)
+            self.relations[name] = rel
+            d.rel = rel
+            self.tables[name] = d.live_columns()
+            entry = stats[name]
+            entry["version"] = version
+            entry["busiest_row_ops"] = d.segments.busiest_row_ops()
+            entry["capacity_records"] = d.capacity
+        return stats
+
+    def dml_row_ops(self) -> Dict[str, float]:
+        """Accumulated busiest-row DML cell writes per mutated relation
+        (the §6.4 write pressure ``cost_report`` folds into endurance)."""
+        return {name: d.segments.busiest_row_ops()
+                for name, d in self._dml.items()}
+
+    def report(self, run: "QueryRun", sf_scale: float = 1.0,
+               hw: cm.HwParams = cm.DEFAULT_HW) -> "QueryCostReport":
+        """:func:`cost_report` wired to THIS database's state: resident/
+        reserved plane bytes and accumulated DML write pressure included."""
+        return cost_report(run, sf_scale, hw, relations=self.relations,
+                           dml_row_ops=self.dml_row_ops())
 
     # -- relation versioning -------------------------------------------------
     def bump_version(self, rel_name: str) -> int:
@@ -827,6 +912,16 @@ class QueryCostReport:
     energy_saving: float
     endurance_ops_per_cell_10y: float
     intermediate_cells: int
+    # Memory accounting of the relations the query touched (0 when the
+    # caller passes no relation handles): device-resident plane bytes —
+    # every attribute plane PLUS the valid plane, spanning the FULL
+    # reserved append-segment capacity — and the reserved-but-unused
+    # share of that figure.
+    bytes_resident: int = 0
+    bytes_reserved: int = 0
+    # Accumulated DML cell writes on the busiest row of those relations
+    # (already folded into ``endurance_ops_per_cell_10y``).
+    dml_row_ops: float = 0.0
 
     def row(self) -> str:
         return (f"{self.name},{self.kind},{self.cycles['total']},"
@@ -835,13 +930,19 @@ class QueryCostReport:
 
 
 def cost_report(run: QueryRun, sf_scale: float = 1.0,
-                hw: cm.HwParams = cm.DEFAULT_HW) -> QueryCostReport:
+                hw: cm.HwParams = cm.DEFAULT_HW, relations=None,
+                dml_row_ops=None) -> QueryCostReport:
     """Project the measured run to paper scale (records x sf_scale vs the
     generated SF) and produce Fig. 8/11/15-comparable numbers.
 
     The PIM cycle count is size-independent (requests broadcast to all
     pages); read traffic and baseline scan traffic scale linearly with
     relation size — exactly the scaling the paper exploits.
+
+    ``relations`` ({name: PimRelation}) adds resident/reserved plane
+    bytes for the touched relations; ``dml_row_ops`` ({name: ops}) folds
+    each relation's accumulated busiest-row DML cell writes into the
+    endurance projection — ``PimDatabase.report`` passes both.
     """
     total = cm.ProgramCost()
     base_bytes = 0
@@ -850,7 +951,15 @@ def cost_report(run: QueryRun, sf_scale: float = 1.0,
     n_crossbars_busiest = 0
     exec_pages = 0
     trace_row_ops = 0.0
+    bytes_resident = 0
+    bytes_reserved = 0
+    dml_ops = 0.0
     for rel_name, rr in run.relations.items():
+        if relations is not None and rel_name in relations:
+            bytes_resident += relations[rel_name].bytes_resident()
+            bytes_reserved += relations[rel_name].bytes_reserved()
+        if dml_row_ops is not None:
+            dml_ops += float(dml_row_ops.get(rel_name, 0.0))
         n_scaled = int(rr.n_records * sf_scale)
         cost = cm.classify_program(rr.trace)
         for f in dataclasses.fields(cm.ProgramCost):
@@ -893,10 +1002,12 @@ def cost_report(run: QueryRun, sf_scale: float = 1.0,
     energy = cm.query_energy(total, timing, n_crossbars_busiest, hw=hw)
     endurance = cm.endurance_ops_per_cell(
         total, exec_time_s=timing.pimdb_total_s, hw=hw,
-        busiest_row_ops=trace_row_ops)
+        busiest_row_ops=trace_row_ops + dml_ops)
     return QueryCostReport(
         run.spec.name, run.spec.kind,
         dict(total=total.cycles_total, **total.breakdown()),
         timing.pim_time_s, timing.read_time_s, timing.baseline_time_s,
         timing.speedup, timing.read_reduction, energy.saving, endurance,
-        total.intermediate_cells_peak)
+        total.intermediate_cells_peak,
+        bytes_resident=bytes_resident, bytes_reserved=bytes_reserved,
+        dml_row_ops=dml_ops)

@@ -73,6 +73,7 @@ class QueryService:
         self.n_coalesced = 0
         self.n_dispatches = 0
         self.n_plane_reads = 0
+        self.n_mutations = 0
         self.n_errors = 0
 
     # -- submission (event-loop side) ---------------------------------------
@@ -114,6 +115,30 @@ class QueryService:
         self._lat_s.append(time.perf_counter() - t0)
         self.n_completed += 1
         return res
+
+    async def apply(self, mutations) -> Dict[str, Dict[str, object]]:
+        """Apply a DML batch (``repro.dml`` mutation specs) through the
+        service, interleaved with query traffic.
+
+        The open admission window is flushed first, then the batch runs
+        on the single dispatch worker — the same 1-wide pool the array
+        stage uses — so mutations are strictly ordered with query
+        windows: already-admitted queries execute against pre-mutation
+        contents, later submissions see the new versions (and miss the
+        result cache by construction, since ``PimDatabase.apply`` bumps
+        every mutated relation's version on publish).
+        """
+        loop = asyncio.get_running_loop()
+        if self._loop is None:
+            self._loop = loop
+            self._sem = asyncio.Semaphore(self.max_pending)
+        elif loop is not self._loop:
+            raise RuntimeError("QueryService is bound to one event loop")
+        self.batcher.flush_now()
+        stats = await loop.run_in_executor(
+            self._dispatch_pool, self.db.apply, list(mutations))
+        self.n_mutations += sum(s["n_mutations"] for s in stats.values())
+        return stats
 
     async def drain(self) -> None:
         """Flush the admission window and wait until nothing is in
@@ -205,6 +230,7 @@ class QueryService:
             "errors": self.n_errors,
             "dispatches": self.n_dispatches,
             "plane_reads": self.n_plane_reads,
+            "mutations": self.n_mutations,
             "inflight": len(self._inflight),
             "cache": self.cache.stats(),
             "batcher": self.batcher.stats(),

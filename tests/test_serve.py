@@ -4,10 +4,12 @@ sequential ``execute`` on jnp+pallas, backpressure, and an 8-device mesh
 subprocess smoke test."""
 import asyncio
 
+import numpy as np
 import pytest
 
 from _mesh_subprocess import run_forced_multidevice
 
+from repro import dml
 from repro.db import queries, tpch
 from repro.db.database import Engine, PimDatabase
 from repro.serve import (AdmissionBatcher, QueryService, ResultCache,
@@ -60,15 +62,19 @@ def test_spec_cache_key_structural(db):
 
 
 def test_cache_key_tracks_relation_version(db):
+    # Real mutations (repro.dml), not a simulated version bump: the
+    # publish step of ``PimDatabase.apply`` is what the cache key must
+    # track.
     q6 = queries.get_query("Q6")
     before = spec_cache_key(db, q6, Engine.FUSED)
-    db.bump_version("lineitem")
+    take = {a: np.asarray(c[:2]) for a, c in db.tables["lineitem"].items()}
+    db.apply([dml.Insert("lineitem", take)])
     after = spec_cache_key(db, q6, Engine.FUSED)
     assert before != after
-    # Other relations' keys are unaffected.
+    # Mutating an unrelated relation leaves other queries' keys alone.
     q14 = queries.get_query("Q14")
     k1 = spec_cache_key(db, q14, Engine.FUSED)
-    db.bump_version("customer")
+    db.apply([dml.Delete("customer", row_ids=[0])])
     assert spec_cache_key(db, q14, Engine.FUSED) == k1
 
 
@@ -148,19 +154,26 @@ def test_service_cache_hit_and_version_invalidation(db):
         async with QueryService(db, max_window=4, max_wait_s=0.001) as svc:
             r1 = await svc.submit(q6)
             r2 = await svc.submit(q6)
-            misses_before_bump = svc.cache.misses
-            db.bump_version("lineitem")
+            misses_before_dml = svc.cache.misses
+            # Real DML through the service: deleting live rows bumps the
+            # published relation version, so the stale cached result can
+            # never be served again.
+            ids = db.dml_state("lineitem").live_ids()[:2]
+            await svc.apply([dml.Delete("lineitem", row_ids=ids)])
             r3 = await svc.submit(q6)
-            return r1, r2, r3, misses_before_bump, svc.cache.stats()
+            return (r1, r2, r3, misses_before_dml, svc.cache.stats(),
+                    svc.stats())
 
-    r1, r2, r3, misses_before, cstats = asyncio.run(run())
+    r1, r2, r3, misses_before, cstats, sstats = asyncio.run(run())
     assert not r1.cached and r2.cached
-    # The version bump changed the key: r3 re-dispatched (a miss), and
-    # its value is still bit-identical (version is pure metadata).
+    # The mutation changed the key: r3 re-dispatched (a miss) and ran
+    # against the post-delete contents — bit-identical to a fresh direct
+    # execute on the mutated database.
     assert not r3.cached
     assert cstats["misses"] == misses_before + 1
-    assert r1.aggregates == r2.aggregates == r3.aggregates \
-        == want.aggregates
+    assert r1.aggregates == r2.aggregates == want.aggregates
+    assert r3.aggregates == db.execute(q6).aggregates
+    assert sstats["mutations"] == 1
 
 
 def test_service_coalesces_identical_inflight(db):
