@@ -24,7 +24,12 @@ streaming scenario (``htap_stream``: trickle INSERT/DELETE batches
 through ``QueryService.apply`` interleaved with Q1/Q6 analytics — Q6 at
 bit-parity with a NumPy mutable-table oracle, no stale cached result
 ever served, and the rotation wear-leveling policy's busiest-row cell
-writes <= 0.5x a first-fit replay of the same mutation trace).
+writes <= 0.5x a first-fit replay of the same mutation trace), and the
+fault-tolerance soak (``chaos_soak``: the same HTAP scenario under the
+deterministic ``repro.faults`` injection campaign — every injected
+fault detected and repaired at oracle bit-parity, transient dispatch
+faults retried or degraded FUSED->EAGER behind the circuit breaker with
+zero caller-visible errors, and the recovery counters gated exactly).
 
 Every row tracks its cold (first-call, XLA-compile-inclusive) latency
 separately from the warm steady state, so the compile-latency trend the
@@ -183,6 +188,7 @@ def bench_program_fusion(sf: float = DEFAULT_SF) -> List[dict]:
     rows.extend(bench_concurrent(db))
     rows.extend(bench_serve(db))
     rows.extend(bench_htap_stream(sf))
+    rows.extend(bench_chaos_soak(sf))
     return rows
 
 
@@ -425,6 +431,59 @@ def bench_htap_stream(sf: float = DEFAULT_SF) -> List[dict]:
                  bytes_resident=rep.bytes_resident,
                  bytes_reserved=rep.bytes_reserved,
                  exact=bool(parity) and ratio <= 0.5)]
+
+
+def bench_chaos_soak(sf: float = DEFAULT_SF) -> List[dict]:
+    """Fault-tolerance soak (``repro.faults``): the htap_stream scenario
+    replayed under the full scheduled injection campaign — cell flips, a
+    ghost valid-bit flip, a stuck-at-1 cell, endurance-driven row death,
+    and transient dispatch faults sized to exercise retry-success,
+    retry-exhaustion degradation, a circuit-breaker trip, and the
+    half-open recovery probe.  The campaign is deterministic (same seed
+    and sf -> same injection coordinates and recovery counters), so the
+    regression gate holds the dispatch count, the detection latency, and
+    the recovered-query count to exact values.  ``exact`` asserts every
+    injected fault was detected, bit-parity with the mutable-table
+    oracle held through every repair, no stale cached result was served,
+    the service never raised to a caller, and the breaker ended closed.
+    A clean (no-inject) control run prices the fault-handling overhead
+    (``qps_clean`` vs ``qps``)."""
+    from repro.faults.chaos import run_chaos
+
+    t0 = time.perf_counter()
+    rep = run_chaos(sf=sf)
+    cold = (time.perf_counter() - t0) * 1e6
+    reps = 2
+    walls, last = [], rep
+    for _ in range(reps):
+        last = run_chaos(sf=sf)
+        walls.append(last["wall_s"] * 1e6)
+    warm = sum(walls) / reps
+    # Control run last, so its qps is measured against warm executables
+    # (same as the faulted warm reps) and the overhead comparison is fair.
+    clean = run_chaos(sf=sf, inject=False)
+    qps = last["n_queries"] / (warm / 1e6)
+    ok = all(r["ok"] and r["all_detected"] and r["parity"]
+             and r["breaker_state"] == "closed" for r in (rep, last))
+    return [_row("chaos_soak", warm, cold,
+                 rounds=last["rounds"], batch=last["batch"],
+                 qps=round(qps, 2),
+                 qps_clean=round(clean["n_queries"] / clean["wall_s"], 2),
+                 injected=last["injected"],
+                 detected=last["detected_injected"],
+                 detect_latency_rounds=last["detect_latency_rounds"],
+                 write_faults=last["write_faults"],
+                 worn_dead=last["worn_dead"],
+                 repaired_rows=last["repaired_rows"],
+                 remapped_rows=last["remapped_rows"],
+                 dispatches=last["dispatches"],
+                 transient_faults=last["transient_faults"],
+                 retries=last["retries"],
+                 degraded_windows=last["degraded_windows"],
+                 recovered_queries=last["recovered_queries"],
+                 breaker_trips=last["breaker_trips"],
+                 breaker_recoveries=last["breaker_recoveries"],
+                 exact=ok and clean["ok"])]
 
 
 def bench_verify(db) -> List[dict]:

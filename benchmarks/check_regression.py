@@ -16,7 +16,11 @@ trace replay, with the >= 2x qps-vs-sequential bar hard-failing via
 ``meta.exact``), the HTAP streaming row (``htap_stream``: warm wall,
 dispatch/plane-read totals and the wear-leveling allocator's
 busiest-row write count, with mutable-oracle bit-parity and the
-<= 0.5x-of-first-fit wear bar hard-failing via ``meta.exact``), and —
+<= 0.5x-of-first-fit wear bar hard-failing via ``meta.exact``), the
+fault-tolerance soak (``chaos_soak``: warm wall plus the deterministic
+recovery counters — dispatch total, fault-detection latency in rounds,
+recovered-query count — with the 100%-detection / oracle-bit-parity /
+zero-caller-error acceptance bar hard-failing via ``meta.exact``), and —
 promoted from tabulated to gated since
 the carry-save arithmetic PR — per-query cold XLA compile latency. The
 full per-row compile-latency table still prints every run, so the trend
@@ -91,6 +95,15 @@ GATES = [
     ("htap_stream", "meta.dispatches", "count"),
     ("htap_stream", "meta.plane_reads", "count"),
     ("htap_stream", "meta.busiest_row_ops", "count"),
+    # Fault-tolerance soak (repro.faults): the injection campaign is
+    # deterministic, so these are exact-by-construction counters — any
+    # drift means detection, retry, or breaker behaviour changed.  The
+    # 100%-detection / oracle-parity / zero-caller-error /
+    # breaker-ends-closed acceptance bar hard-fails via meta.exact.
+    ("chaos_soak", "warm_us", "time"),
+    ("chaos_soak", "meta.dispatches", "count"),
+    ("chaos_soak", "meta.detect_latency_rounds", "count"),
+    ("chaos_soak", "meta.recovered_queries", "count"),
 ]
 
 

@@ -189,12 +189,35 @@ def collect_dml_programs(db: PimDatabase) -> List[Program]:
     return programs
 
 
+def collect_fault_programs(db: PimDatabase) -> List[Program]:
+    """Fault-recovery write programs (``repro.faults``): a soft in-place
+    rewrite (live row + ghost valid clear) and a hard-fault remap
+    (quarantine clear + move into spare capacity) on a relation the DML
+    sweep above does not mutate, captured exactly as ``RelationDml``
+    emitted them — the repair path is gated by the same static passes as
+    the workload path."""
+    d = db.dml_state("orders")
+    n_before = len(d.programs)
+    live = d.live_ids()
+    # Soft repair: one live slot plus a ghost slot past the watermark.
+    ghost = d.capacity - 1
+    d.rewrite_rows([int(d.slot_of[live[0]]), ghost])
+    # Hard repair: remap two live rows off their (nominally faulty)
+    # slots; retires the slots, allocates spares, moves the rows.
+    d.remap_rows([int(d.slot_of[i]) for i in live[1:3]])
+    programs: List[Program] = []
+    for op, instrs in d.programs[n_before:]:
+        programs.append((f"faults/orders/{op}", d.rel, instrs, ()))
+    return programs
+
+
 def lint(sf: float = 0.002, strict: bool = False,
          verbose: bool = False) -> int:
     t0 = time.perf_counter()
     db = PimDatabase(tpch.generate(sf=sf, seed=0))
     programs = (collect_programs(db) + collect_linked_programs(db)
-                + collect_serve_programs(db) + collect_dml_programs(db))
+                + collect_serve_programs(db) + collect_dml_programs(db)
+                + collect_fault_programs(db))
 
     totals = {"error": 0, "warning": 0, "info": 0}
     n_checked = 0

@@ -97,6 +97,25 @@ def unpack_bits(planes: np.ndarray, n_records: int) -> np.ndarray:
     return out
 
 
+def unpack_rows(planes: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """Read back the values of selected record slots only.
+
+    ``planes``: (n_bits, W) uint32; ``rows``: record slot indices ->
+    (len(rows),) uint64.  The row-targeted readback the integrity layer
+    uses for verify-after-write: touching just the written slots instead
+    of a full :func:`unpack_bits` over the capacity.
+    """
+    planes = np.asarray(planes, dtype=np.uint32)
+    rows = np.asarray(rows, dtype=np.int64)
+    word = rows // WORD_BITS
+    shift = (rows % WORD_BITS).astype(np.uint32)
+    out = np.zeros(rows.shape[0], dtype=np.uint64)
+    for b in range(planes.shape[0]):
+        bits = (planes[b, word] >> shift) & np.uint32(1)
+        out |= bits.astype(np.uint64) << np.uint64(b)
+    return out
+
+
 def pack_mask(mask: np.ndarray, n_words: int | None = None) -> np.ndarray:
     """Pack a boolean record mask into a (n_words,) uint32 bitvector.
 

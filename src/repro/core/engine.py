@@ -437,6 +437,28 @@ def apply_plane_write(planes: jnp.ndarray, touch: np.ndarray,
     return (planes & ~t[None, :]) | jnp.asarray(vals)
 
 
+# Device-fault injection hook (repro.faults): when installed, every DATA
+# plane write is routed through it — dead rows drop their touch/value
+# bits (the write never programs the row, modeling endurance-exhausted
+# cells), and stuck-at cells force their value back after the merge.
+# The valid plane is exempt by model choice: it is the one plane the
+# controller can always program (an SLC-style healthier region), so
+# quarantining a faulty row via ValidClear always succeeds.
+_WRITE_FAULT_HOOK = None
+
+
+def install_write_fault_hook(hook):
+    """Install (or, with ``None``, remove) the process-wide write-fault
+    hook.  Returns the previously installed hook so callers can restore
+    it; the hook must provide ``filter_plane_write(rel, attr, touch,
+    vals) -> (touch, vals)`` and ``force_stuck(rel, attr, planes) ->
+    planes``."""
+    global _WRITE_FAULT_HOOK
+    prev = _WRITE_FAULT_HOOK
+    _WRITE_FAULT_HOOK = hook
+    return prev
+
+
 # --------------------------------------------------------------------------
 # Relation store + executor
 # --------------------------------------------------------------------------
@@ -668,8 +690,15 @@ class Engine:
                 p = self.rel.planes[instr.dest]
                 touch, vals = plane_write_masks(instr.rows, instr.values,
                                                 p.shape[0], W)
+                hook = _WRITE_FAULT_HOOK
+                if hook is not None:
+                    touch, vals = hook.filter_plane_write(
+                        self.rel.name, instr.dest, touch, vals)
                 planes = dict(self.rel.planes)
                 planes[instr.dest] = apply_plane_write(p, touch, vals)
+                if hook is not None:
+                    planes[instr.dest] = hook.force_stuck(
+                        self.rel.name, instr.dest, planes[instr.dest])
                 self.rel = dataclasses.replace(self.rel, planes=planes)
         elif kind == "ValidClear":
             touch = write_touch_mask(np.asarray(instr.rows),

@@ -758,8 +758,28 @@ class PimDatabase:
             entry["cells_written"] += st.cells_written
             if name not in order:
                 order.append(name)
-        self.tables = dict(self.tables)
+        versions = self.publish(order)
         for name in order:
+            d = self._dml[name]
+            entry = stats[name]
+            entry["version"] = versions[name]
+            entry["busiest_row_ops"] = d.segments.busiest_row_ops()
+            entry["capacity_records"] = d.capacity
+        return stats
+
+    def publish(self, rel_names: Sequence[str]) -> Dict[str, int]:
+        """Publish the current DML state of each named relation: bump
+        the content version (version-keyed serving caches miss from then
+        on by construction), re-shard if a mesh is attached, and
+        re-point ``self.tables`` at the live rows.  Shared by
+        :meth:`apply` and the fault-recovery layer
+        (``repro.faults.FaultManager.scrub`` republishes repaired
+        relations through this exact path, so a repair can never leave a
+        stale cached result servable).  Returns ``{name: new_version}``.
+        """
+        self.tables = dict(self.tables)
+        versions: Dict[str, int] = {}
+        for name in rel_names:
             d = self._dml[name]
             version = max(d.rel.version,
                           self.relations[name].version) + 1
@@ -769,11 +789,8 @@ class PimDatabase:
             self.relations[name] = rel
             d.rel = rel
             self.tables[name] = d.live_columns()
-            entry = stats[name]
-            entry["version"] = version
-            entry["busiest_row_ops"] = d.segments.busiest_row_ops()
-            entry["capacity_records"] = d.capacity
-        return stats
+            versions[name] = version
+        return versions
 
     def dml_row_ops(self) -> Dict[str, float]:
         """Accumulated busiest-row DML cell writes per mutated relation

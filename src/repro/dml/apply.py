@@ -92,6 +92,10 @@ class RelationDml:
         self.trace: List[isa.PimInstruction] = []
         self.programs: List[Tuple[str, Tuple[isa.PimInstruction, ...]]] = []
         self.stats: List[MutationStats] = []
+        # Integrity observer (repro.faults.FaultManager): when set, every
+        # executed write program is verified against its intended values
+        # (readback) and the guard-plane parity is kept in step.
+        self.integrity = None
 
     # -- storage ----------------------------------------------------------
     @property
@@ -148,6 +152,8 @@ class RelationDml:
         self.trace.extend(instrs)
         self.programs.append((op, tuple(instrs)))
         self.stats.append(MutationStats.from_program(op, n_rows, instrs))
+        if self.integrity is not None:
+            self.integrity.after_write(self, op, instrs)
 
     # -- selection --------------------------------------------------------
     def _resolve(self, pred=None, row_ids: Optional[Sequence[int]] = None
@@ -310,15 +316,19 @@ class RelationDml:
         self.rel = dataclasses.replace(rel, layout=layout, planes=planes)
 
     def compact(self) -> int:
-        """GC deleted rows: repack live rows (logical order) into slots
-        [0, k), clear every stale valid bit above, reset the watermark.
-        Wear counters persist — compaction is real write pressure."""
+        """GC deleted rows: repack live rows (logical order) into the
+        lowest non-retired slots, clear every stale valid bit above,
+        reset the watermark.  Wear counters persist — compaction is real
+        write pressure.  (Without retired slots the targets are exactly
+        ``[0, k)``, the pre-fault-tolerance behaviour.)"""
         ids = self.live_ids()
         k = len(ids)
         cols = self.live_columns()
         attrs = self.rel.layout.attributes
-        stale = [int(self.slot_of[i]) for i in ids if self.slot_of[i] >= k]
-        new_slots = tuple(range(k))
+        old_slots = {int(self.slot_of[i]) for i in ids}
+        slot_arr = self.segments.repack(k)
+        new_slots = tuple(int(s) for s in slot_arr)
+        stale = sorted(old_slots - set(new_slots))
         instrs: List[isa.PimInstruction] = [
             isa.PlaneWrite(dest=a, rows=new_slots,
                            values=tuple(int(x) for x in cols[a]),
@@ -328,17 +338,104 @@ class RelationDml:
                                      values=(1,) * k, n_bits=1))
         if stale:
             instrs.append(isa.ValidClear(dest="__valid__",
-                                         rows=tuple(sorted(stale))))
+                                         rows=tuple(stale)))
         self._run("compact", k, instrs)
         for a in attrs:
-            self.shadow[a][:k] = cols[a]
+            self.shadow[a][slot_arr] = cols[a]
         self.live[:] = False
-        self.live[:k] = True
-        self.slot_of = {lid: pos for pos, lid in enumerate(ids)}
-        self.segments.repack(k)
-        self.segments.record_writes(np.arange(k), self.rel.layout.row_bits)
+        self.live[slot_arr] = True
+        self.slot_of = {lid: int(s) for lid, s in zip(ids, slot_arr)}
+        self.segments.record_writes(slot_arr, self.rel.layout.row_bits)
         self.segments.log("compact", (), self.rel.layout.row_bits)
-        self._set_watermark(k)
+        self._set_watermark(int(slot_arr.max()) + 1 if k else 0)
+        return k
+
+    # -- fault recovery (repro.faults) ------------------------------------
+    def rewrite_rows(self, slots: Sequence[int]) -> int:
+        """Repair soft (transient) corruption in place: re-program every
+        listed slot from the host shadow — live slots get their full
+        attribute row plus a valid set, non-live slots are zeroed and
+        valid-cleared (a ghost row made visible by a flipped valid bit
+        goes back to invisible).  Not logged to the allocator event
+        trace: repairs are maintenance writes, not workload, so the
+        wear-policy replay counterfactual stays an apples-to-apples
+        comparison (wear counters still accrue — repair is real write
+        pressure)."""
+        slots = sorted({int(s) for s in slots})
+        if not slots:
+            return 0
+        attrs = self.rel.layout.attributes
+        rows = tuple(slots)
+        live_rows = tuple(s for s in slots if self.live[s])
+        ghost_rows = tuple(s for s in slots if not self.live[s])
+        instrs: List[isa.PimInstruction] = [
+            isa.PlaneWrite(
+                dest=a,
+                rows=rows,
+                values=tuple(int(self.shadow[a][s]) if self.live[s] else 0
+                             for s in slots),
+                n_bits=attrs[a].n_bits)
+            for a in attrs]
+        if live_rows:
+            instrs.append(isa.PlaneWrite(
+                dest="__valid__", rows=live_rows,
+                values=(1,) * len(live_rows), n_bits=1))
+        if ghost_rows:
+            instrs.append(isa.ValidClear(dest="__valid__",
+                                         rows=ghost_rows))
+        self._run("repair.rewrite", len(slots), instrs)
+        self.segments.record_writes(np.asarray(slots, dtype=np.int64),
+                                    self.rel.layout.row_bits)
+        return len(slots)
+
+    def remap_rows(self, slots: Sequence[int]) -> int:
+        """Repair hard faults (endurance-dead or stuck rows): move every
+        live record off the listed slots into freshly allocated spare
+        capacity — the update-by-move machinery under stable logical ids
+        — and permanently retire the faulty slots so the allocator never
+        places a record there again.  Returns the number of rows moved.
+        Like :meth:`rewrite_rows`, excluded from the replayable event
+        trace."""
+        slots = sorted({int(s) for s in slots})
+        if not slots:
+            return 0
+        attrs = self.rel.layout.attributes
+        moving = [lid for lid in self.live_ids()
+                  if int(self.slot_of[lid]) in set(slots)]
+        old_slots = np.asarray([self.slot_of[lid] for lid in moving],
+                               dtype=np.int64)
+        saved = {a: self.shadow[a][old_slots].copy() for a in attrs}
+        # Quarantine first: every faulty slot goes invisible (the valid
+        # plane always programs — see the engine's fault-hook contract),
+        # then gets retired so _alloc below cannot hand it back.
+        self._run("repair.remap.clear", len(slots), [
+            isa.ValidClear(dest="__valid__", rows=tuple(slots))])
+        self.live[slots] = False
+        self.segments.retire(slots)
+        self.segments.record_writes(np.asarray(slots, dtype=np.int64), 1.0)
+        k = len(moving)
+        if k:
+            new_slots = self._alloc(k)
+            attrs = self.rel.layout.attributes
+            instrs = [
+                isa.PlaneWrite(dest=a,
+                               rows=tuple(int(s) for s in new_slots),
+                               values=tuple(int(x) for x in saved[a]),
+                               n_bits=attrs[a].n_bits)
+                for a in attrs]
+            instrs.append(isa.PlaneWrite(
+                dest="__valid__", rows=tuple(int(s) for s in new_slots),
+                values=(1,) * k, n_bits=1))
+            self._run("repair.remap.insert", k, instrs)
+            for a in attrs:
+                self.shadow[a][new_slots] = saved[a]
+            self.live[new_slots] = True
+            for lid, s in zip(moving, new_slots):
+                self.slot_of[lid] = int(s)
+            self._set_watermark(max(self.rel.layout.n_records,
+                                    int(new_slots.max()) + 1))
+            self.segments.record_writes(new_slots,
+                                        self.rel.layout.row_bits)
         return k
 
     # -- dispatch ---------------------------------------------------------

@@ -66,6 +66,10 @@ class AppendSegments:
         self.writes = np.zeros(self.capacity, dtype=np.float64)
         self._used = np.zeros(self.capacity, dtype=bool)
         self._used[:n_packed] = True
+        # Retired slots (endurance-dead or stuck rows, quarantined by the
+        # fault-recovery layer): permanently marked used so ``alloc``
+        # never hands them out again, and ``repack`` routes around them.
+        self._retired = np.zeros(self.capacity, dtype=bool)
         self._cursor = n_packed % max(1, self.capacity)
         self.events: List[SlotEvent] = []
         self.grown_tiles = 0
@@ -80,6 +84,8 @@ class AppendSegments:
             [self.writes, np.zeros(slots, dtype=np.float64)])
         self._used = np.concatenate(
             [self._used, np.zeros(slots, dtype=bool)])
+        self._retired = np.concatenate(
+            [self._retired, np.zeros(slots, dtype=bool)])
         self.capacity += slots
         self.grown_tiles += slots // bitslice.TILE_RECORDS
 
@@ -101,15 +107,32 @@ class AppendSegments:
         return np.sort(slots)
 
     def free(self, slots: Sequence[int]) -> None:
-        self._used[np.asarray(slots, dtype=np.int64)] = False
+        idx = np.asarray(slots, dtype=np.int64)
+        self._used[idx] = self._retired[idx]   # retired slots stay occupied
+
+    def retire(self, slots: Sequence[int]) -> None:
+        """Permanently quarantine slots (dead/stuck rows): marked both
+        retired and used, so neither ``alloc`` nor ``repack`` ever
+        places a record on them again."""
+        idx = np.asarray(slots, dtype=np.int64)
+        self._retired[idx] = True
+        self._used[idx] = True
+
+    @property
+    def n_retired(self) -> int:
+        return int(self._retired.sum())
 
     def record_writes(self, slots: Sequence[int], cells_per_row: float) -> None:
         self.writes[np.asarray(slots, dtype=np.int64)] += cells_per_row
 
-    def repack(self, n_live: int) -> None:
-        """Compaction occupancy: live rows now fill slots [0, n_live)."""
-        self._used[:] = False
-        self._used[:n_live] = True
+    def repack(self, n_live: int) -> np.ndarray:
+        """Compaction occupancy: live rows fill the ``n_live`` lowest
+        NON-retired slots (identical to ``[0, n_live)`` while nothing is
+        retired).  Returns the chosen slots in ascending order."""
+        slots = np.flatnonzero(~self._retired)[:n_live]
+        self._used[:] = self._retired
+        self._used[slots] = True
+        return slots
 
     # -- profile ----------------------------------------------------------
     def busiest_row_ops(self) -> float:
@@ -150,12 +173,14 @@ def replay(events: Sequence[SlotEvent], capacity: int, n_packed: int,
             slots = [slot_of[lid] for lid in ev.ids]
             seg.record_writes(slots, ev.cells_per_row)
         elif ev.op == "compact":
-            # Live rows (in logical order) repack into the lowest slots.
+            # Live rows (in logical order) repack into the lowest slots
+            # (replayed traces never contain repairs, so no slot of a
+            # replay allocator is ever retired).
             live = sorted(slot_of)
-            seg.repack(len(live))
-            for pos, lid in enumerate(live):
-                slot_of[lid] = pos
-            seg.record_writes(np.arange(len(live)), ev.cells_per_row)
+            slots = seg.repack(len(live))
+            for lid, s in zip(live, slots):
+                slot_of[lid] = int(s)
+            seg.record_writes(slots, ev.cells_per_row)
         else:  # pragma: no cover - log is produced by this module only
             raise ValueError(f"unknown slot event {ev.op!r}")
     return seg

@@ -1,0 +1,20 @@
+"""Fault tolerance for the PIM database stack.
+
+Device-fault injection (``model``), XOR-parity guard-plane integrity
+(``guard``), detection + self-healing repair (``recovery``), and the
+deterministic chaos harness that soaks the serving stack under injected
+faults (``chaos``).  See ``README.md`` in this package for the fault
+taxonomy, the guard-plane math, and the recovery state machine.
+"""
+from repro.faults.guard import RelationGuard
+from repro.faults.model import DeviceFaultModel, TransientDispatchError
+from repro.faults.recovery import CircuitBreaker, FaultManager, RetryPolicy
+
+__all__ = [
+    "CircuitBreaker",
+    "DeviceFaultModel",
+    "FaultManager",
+    "RelationGuard",
+    "RetryPolicy",
+    "TransientDispatchError",
+]

@@ -1,0 +1,147 @@
+"""Per-relation XOR-parity guard planes (integrity layer).
+
+Every guarded relation carries, for each attribute (and for the valid
+plane), one extra (W,) uint32 *guard plane* holding the XOR of that
+attribute's bit planes — the per-tile parity column the paper's valid
+attribute hints at (§5.1): one extra crossbar column per attribute, and
+checking it is itself a bulk-bitwise XOR-reduce, exactly the operation
+the substrate is good at.
+
+The crucial design decision: the **expected** parity is maintained
+*incrementally from the write-instruction stream*, never recomputed
+from the (possibly already corrupted) stored planes.  The initial
+parity comes from the pack-time planes (trusted: bulk load is
+formatting, verified by construction); from then on every
+``PlaneWrite`` / ``ValidClear`` updates the expectation from the
+instruction's own touch/value masks:
+
+    data PlaneWrite:  parity  = (parity  & ~touch) | (xor-reduce(vals) & touch)
+    valid PlaneWrite: parity_v = (parity_v & ~touch) | vals[0]
+    ValidClear:       parity_v &= ~touch
+
+(Slots inside ``touch`` are fully re-programmed, so their old parity
+contribution is replaced wholesale; slots outside are untouched.)
+
+``scrub(rel)`` then recomputes the *actual* parity from the stored
+planes and diffs: any single-cell flip in a column of ``2k+1`` planes
+changes the stored XOR, so a single flip is detected with zero false
+negatives, and because the expectation tracks the instruction stream
+exactly, legitimate writes produce zero false positives.  Retired
+(quarantined) slots are excluded from the diff forever — their cells
+are allowed to rot.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitslice, engine, isa
+
+U32 = np.uint32
+VALID = "__valid__"
+
+
+def _xor_reduce(planes: np.ndarray) -> np.ndarray:
+    """(n_bits, W) -> (W,) columnwise XOR."""
+    out = np.zeros(planes.shape[-1], U32)
+    for b in range(planes.shape[0]):
+        out ^= np.asarray(planes[b], U32)
+    return out
+
+
+class RelationGuard:
+    """Incremental expected-parity state for one guarded relation."""
+
+    def __init__(self, rel) -> None:
+        self.name = rel.name
+        # plane-name -> expected (W,) uint32 parity. Built from the
+        # pack-time planes, which are trusted.
+        self.parity: Dict[str, np.ndarray] = {
+            a: _xor_reduce(np.asarray(p))
+            for a, p in rel.planes.items()}
+        self.parity[VALID] = np.asarray(rel.valid, U32).copy()
+        # (W,) bitmask of quarantined slots, excluded from diffs.
+        self.quarantined = np.zeros(rel.layout.n_words, U32)
+
+    # -- capacity ---------------------------------------------------------
+    def _ensure_words(self, n_words: int) -> None:
+        for a, p in self.parity.items():
+            if p.shape[0] < n_words:
+                self.parity[a] = np.concatenate(
+                    [p, np.zeros(n_words - p.shape[0], U32)])
+        if self.quarantined.shape[0] < n_words:
+            self.quarantined = np.concatenate(
+                [self.quarantined,
+                 np.zeros(n_words - self.quarantined.shape[0], U32)])
+
+    def ensure_attr(self, attr: str, n_words: int) -> None:
+        """A widened attribute replaces its plane stack with extra zero
+        planes on top — XOR with zeros is identity, so the existing
+        parity stays valid; only brand-new attributes need an entry."""
+        if attr not in self.parity:
+            self.parity[attr] = np.zeros(n_words, U32)
+
+    # -- incremental expectation ------------------------------------------
+    def observe(self, instr, n_words: int) -> None:
+        """Fold one write instruction into the expected parity."""
+        self._ensure_words(n_words)
+        if isinstance(instr, isa.PlaneWrite):
+            if instr.dest == VALID:
+                touch, vals = engine.plane_write_masks(
+                    instr.rows, instr.values, 1, n_words)
+                self.parity[VALID] = \
+                    (self.parity[VALID] & ~touch) | vals[0]
+            else:
+                touch, vals = engine.plane_write_masks(
+                    instr.rows, instr.values, instr.n_bits, n_words)
+                self.ensure_attr(instr.dest, n_words)
+                p = self.parity[instr.dest]
+                self.parity[instr.dest] = \
+                    (p & ~touch) | (_xor_reduce(vals) & touch)
+        elif isinstance(instr, isa.ValidClear):
+            touch = engine.write_touch_mask(
+                np.asarray(instr.rows, np.int64), n_words)
+            self.parity[VALID] = self.parity[VALID] & ~touch
+
+    # -- scrub ------------------------------------------------------------
+    def scrub(self, rel) -> List[Tuple[str, int]]:
+        """Diff expected parity against the stored planes.
+
+        Returns corrupt ``(plane_name, slot)`` coordinates (plane_name
+        is an attribute or ``"__valid__"``), excluding quarantined
+        slots.  A diff localizes corruption to a 32-slot word; the bit
+        position inside the word pins the exact slot.
+        """
+        n_words = rel.layout.n_words
+        self._ensure_words(n_words)
+        bad: List[Tuple[str, int]] = []
+        for a, planes in rel.planes.items():
+            actual = _xor_reduce(np.asarray(planes))
+            diff = (actual ^ self.parity[a][:n_words]) \
+                & ~self.quarantined[:n_words]
+            for w in np.flatnonzero(diff):
+                d = int(diff[w])
+                for bit in range(bitslice.WORD_BITS):
+                    if (d >> bit) & 1:
+                        bad.append((a, int(w) * bitslice.WORD_BITS + bit))
+        actual_v = np.asarray(rel.valid, U32)
+        diff = (actual_v ^ self.parity[VALID][:n_words]) \
+            & ~self.quarantined[:n_words]
+        for w in np.flatnonzero(diff):
+            d = int(diff[w])
+            for bit in range(bitslice.WORD_BITS):
+                if (d >> bit) & 1:
+                    bad.append((VALID, int(w) * bitslice.WORD_BITS + bit))
+        return bad
+
+    def quarantine(self, slots: Sequence[int]) -> None:
+        """Permanently exclude slots from future scrub diffs (their
+        rows are retired; the cells may rot freely)."""
+        if not len(slots):
+            return
+        word_max = max(int(s) for s in slots) // bitslice.WORD_BITS + 1
+        self._ensure_words(word_max)
+        for s in slots:
+            w, b = divmod(int(s), bitslice.WORD_BITS)
+            self.quarantined[w] |= U32(1) << U32(b)

@@ -16,6 +16,8 @@ from __future__ import annotations
 import argparse
 import asyncio
 import dataclasses
+import os
+import sys
 import time
 
 import jax
@@ -97,9 +99,29 @@ def serve_trace(db, specs, *, concurrency: int = 8, max_window: int = 8,
     return asyncio.run(run())
 
 
+def _arm_watchdog(timeout_s: float):
+    """Hard wall-clock limit for a replay run: if the deadline passes,
+    kill the whole process with exit code 124 (the ``timeout(1)``
+    convention) — a wedged event loop or dispatch worker must fail CI,
+    never hang it.  Returns the started timer (daemon thread)."""
+    import threading
+
+    def die():
+        sys.stderr.write(
+            f"serve replay exceeded --timeout-s={timeout_s}; aborting\n")
+        sys.stderr.flush()
+        os._exit(124)
+
+    t = threading.Timer(timeout_s, die)
+    t.daemon = True
+    t.start()
+    return t
+
+
 def serve_db_main(args) -> None:
     from repro.db import Engine, PimDatabase, tpch
 
+    watchdog = _arm_watchdog(args.timeout_s) if args.timeout_s else None
     tables = tpch.generate(sf=args.sf, seed=args.seed)
     db = PimDatabase(tables, backend=args.backend)
     specs = parse_trace(args.trace)
@@ -128,12 +150,19 @@ def serve_db_main(args) -> None:
         t0 = time.perf_counter()
         seq = [db.execute(s, engine=Engine.FUSED) for s in specs]
         seq_wall = time.perf_counter() - t0
-        for r, sr in zip(results, seq):
-            assert (r.rows == sr.rows and
-                    r.aggregates == sr.aggregates), r.name
+        # Explicit parity check with a non-zero exit: a bare assert is
+        # stripped under -O and would let a silent mismatch pass CI.
+        mismatched = [sr.spec.name for r, sr in zip(results, seq)
+                      if r.rows != sr.rows or r.aggregates != sr.aggregates]
+        if mismatched:
+            print(f"PARITY FAILURE: service != sequential for "
+                  f"{mismatched}", file=sys.stderr)
+            sys.exit(1)
         print(f"sequential execute loop: {seq_wall * 1e3:.1f} ms "
               f"({len(specs) / seq_wall:.1f} qps) -> "
               f"service speedup {seq_wall / wall:.2f}x (bit-parity ok)")
+    if watchdog is not None:
+        watchdog.cancel()
 
 
 def main():
@@ -152,6 +181,9 @@ def main():
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--timeout-s", type=float, default=600.0,
+                    help="hard wall-clock limit for --mode db replay "
+                         "(exit 124 on expiry; 0 disables)")
     args = ap.parse_args()
     if args.mode == "db":
         serve_db_main(args)

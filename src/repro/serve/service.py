@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import program as prog
 from repro.db.database import Engine, PimDatabase, QueryResult
+from repro.faults.model import TransientDispatchError
 
 from .batcher import AdmissionBatcher
 from .cache import ResultCache, spec_cache_key
@@ -52,9 +53,13 @@ class QueryService:
                  engine: Engine = Engine.FUSED,
                  max_window: int = 8, max_wait_s: float = 0.002,
                  cache_capacity: int = 256,
-                 host_workers: int = 4, max_pending: int = 64):
+                 host_workers: int = 4, max_pending: int = 64,
+                 fault_manager=None):
         self.db = db
         self.engine = Engine.coerce(engine)
+        #: Optional repro.faults.FaultManager: enables transient-fault
+        #: retry, the FUSED->EAGER circuit breaker, and ``scrub()``.
+        self.faults = fault_manager
         self.cache = ResultCache(cache_capacity)
         self.batcher = AdmissionBatcher(self._on_window,
                                         max_window=max_window,
@@ -75,18 +80,17 @@ class QueryService:
         self.n_plane_reads = 0
         self.n_mutations = 0
         self.n_errors = 0
+        self.n_transient_faults = 0
+        self.n_retries = 0
+        self.n_degraded_windows = 0
+        self.n_fault_recovered = 0
 
     # -- submission (event-loop side) ---------------------------------------
     async def submit(self, spec) -> QueryResult:
         """Submit one query; resolves to its QueryResult.  Cache hits
         return immediately (``result.cached`` set); key-equal in-flight
         submissions coalesce onto one dispatch."""
-        loop = asyncio.get_running_loop()
-        if self._loop is None:
-            self._loop = loop
-            self._sem = asyncio.Semaphore(self.max_pending)
-        elif loop is not self._loop:
-            raise RuntimeError("QueryService is bound to one event loop")
+        loop = self._bind_loop()
         t0 = time.perf_counter()
         self.n_submitted += 1
 
@@ -128,17 +132,36 @@ class QueryService:
         result cache by construction, since ``PimDatabase.apply`` bumps
         every mutated relation's version on publish).
         """
+        loop = self._bind_loop()
+        self.batcher.flush_now()
+        stats = await loop.run_in_executor(
+            self._dispatch_pool, self.db.apply, list(mutations))
+        self.n_mutations += sum(s["n_mutations"] for s in stats.values())
+        return stats
+
+    async def scrub(self) -> Dict[str, Dict[str, object]]:
+        """Run one fault-manager integrity scrub, ordered with query
+        traffic exactly like :meth:`apply`: the open admission window
+        flushes first, then the scrub (parity diff + repair + version
+        republish) runs on the single dispatch worker.  Queries admitted
+        before the scrub execute against pre-repair contents; later
+        submissions see the repaired (re-versioned) relations and miss
+        the result cache by construction."""
+        if self.faults is None:
+            raise RuntimeError("QueryService has no fault_manager")
+        loop = self._bind_loop()
+        self.batcher.flush_now()
+        return await loop.run_in_executor(
+            self._dispatch_pool, self.faults.scrub)
+
+    def _bind_loop(self) -> asyncio.AbstractEventLoop:
         loop = asyncio.get_running_loop()
         if self._loop is None:
             self._loop = loop
             self._sem = asyncio.Semaphore(self.max_pending)
         elif loop is not self._loop:
             raise RuntimeError("QueryService is bound to one event loop")
-        self.batcher.flush_now()
-        stats = await loop.run_in_executor(
-            self._dispatch_pool, self.db.apply, list(mutations))
-        self.n_mutations += sum(s["n_mutations"] for s in stats.values())
-        return stats
+        return loop
 
     async def drain(self) -> None:
         """Flush the admission window and wait until nothing is in
@@ -162,21 +185,57 @@ class QueryService:
     # -- window execution (worker side) -------------------------------------
     def _on_window(self, window: List[_Request]) -> None:
         # Batcher flush fires on the event loop; hand straight off so the
-        # loop never blocks on compilation or dispatch.
-        self._dispatch_pool.submit(self._run_window, window)
+        # loop never blocks on compilation or dispatch.  A failed handoff
+        # (pool already shut down) must still reject every request — a
+        # window whose futures never resolve wedges all its awaiters.
+        try:
+            self._dispatch_pool.submit(self._run_window, window)
+        except Exception as e:                   # noqa: BLE001
+            for r in window:
+                self._reject(r, e)
 
     def _run_window(self, window: List[_Request]) -> None:
         try:
+            fm = self.faults
             if self.engine is not Engine.FUSED:
-                for r in window:
-                    try:
-                        self._resolve(r, self.db._execute_one(
-                            r.spec, self.engine))
-                    except Exception as e:      # noqa: BLE001
-                        self._reject(r, e)
+                self._run_window_eager(window, self.engine)
                 return
-            pendings, stats = self.db.dispatch_batch(
-                [r.spec for r in window])
+            if fm is not None and not fm.breaker.allow_fused():
+                # Breaker open: degrade the window to the EAGER engine
+                # (slower, still correct) instead of failing queries.
+                self.n_degraded_windows += 1
+                self.n_fault_recovered += len(window)
+                self._run_window_eager(window, Engine.EAGER)
+                return
+            attempt = 0
+            while True:
+                try:
+                    if fm is not None:
+                        fm.model.check_dispatch()
+                    pendings, stats = self.db.dispatch_batch(
+                        [r.spec for r in window])
+                    break
+                except TransientDispatchError:
+                    self.n_transient_faults += 1
+                    if fm is None or attempt >= fm.retry.max_retries:
+                        if fm is not None:
+                            fm.breaker.record_failure()
+                        # Retries exhausted: degrade this window too.
+                        self.n_degraded_windows += 1
+                        self.n_fault_recovered += len(window)
+                        self._run_window_eager(window, Engine.EAGER)
+                        return
+                    time.sleep(fm.retry.delay(attempt))
+                    attempt += 1
+                    self.n_retries += 1
+            if fm is not None:
+                fm.breaker.record_success()
+                if attempt:
+                    self.n_fault_recovered += len(window)
+            if len(pendings) != len(window):
+                raise RuntimeError(
+                    f"dispatch_batch returned {len(pendings)} pendings "
+                    f"for a {len(window)}-request window")
             self.n_dispatches += int(stats["n_dispatches"])
             self.n_plane_reads += sum(
                 rs["plane_reads"] for rs in stats["relations"].values())
@@ -187,6 +246,14 @@ class QueryService:
                     self._resolve(r, p.result)
         except Exception as e:                   # noqa: BLE001
             for r in window:
+                self._reject(r, e)
+
+    def _run_window_eager(self, window: List[_Request],
+                          engine: Engine) -> None:
+        for r in window:
+            try:
+                self._resolve(r, self.db._execute_one(r.spec, engine))
+            except Exception as e:              # noqa: BLE001
                 self._reject(r, e)
 
     def _finish_host(self, req: _Request, pending) -> None:
@@ -223,7 +290,7 @@ class QueryService:
                 "mean": 1e3 * sum(lat) / len(lat)}
 
     def stats(self) -> Dict[str, object]:
-        return {
+        out = {
             "submitted": self.n_submitted,
             "completed": self.n_completed,
             "coalesced": self.n_coalesced,
@@ -236,7 +303,18 @@ class QueryService:
             "batcher": self.batcher.stats(),
             "program_cache": prog.program_cache_stats(),
             "latency_ms": self.latency_ms(),
+            "transient_faults": self.n_transient_faults,
+            "retries": self.n_retries,
+            "degraded_windows": self.n_degraded_windows,
+            "fault_recovered": self.n_fault_recovered,
         }
+        if self.faults is not None:
+            out["breaker"] = {
+                "state": self.faults.breaker.state,
+                "trips": self.faults.breaker.n_trips,
+                "recoveries": self.faults.breaker.n_recoveries,
+            }
+        return out
 
 
 def _pct(sorted_vals: List[float], q: float) -> float:

@@ -1,8 +1,13 @@
 """Shared helper: run a code snippet in a subprocess whose host is forced
 to expose multiple CPU devices, so the main pytest process keeps seeing
-exactly 1 device (sibling-import pattern, like ``_hypothesis_compat``)."""
+exactly 1 device (sibling-import pattern, like ``_hypothesis_compat``).
+
+The child runs in its own process group with a hard timeout: on expiry
+the whole group is killed (SIGKILL) and the run FAILS with the captured
+output — a wedged subprocess must fail CI, never hang it."""
 import os
 import pathlib
+import signal
 import subprocess
 import sys
 import textwrap
@@ -15,8 +20,22 @@ def run_forced_multidevice(code: str, devices: int = 8,
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = str(ROOT / "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, r.stdout + r.stderr
-    return r.stdout
+    proc = subprocess.Popen([sys.executable, "-c", textwrap.dedent(code)],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True, env=env, start_new_session=True)
+    try:
+        out, err = proc.communicate(timeout=timeout)
+    except subprocess.TimeoutExpired:
+        # Kill the whole process group: the child may have forked (XLA
+        # compilation workers) and a surviving grandchild would keep the
+        # pipe open and wedge the harness.
+        try:
+            os.killpg(proc.pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+        out, err = proc.communicate()
+        raise AssertionError(
+            f"forced-multidevice subprocess exceeded {timeout}s "
+            f"(killed)\n--- stdout ---\n{out}\n--- stderr ---\n{err}")
+    assert proc.returncode == 0, out + err
+    return out

@@ -1,0 +1,330 @@
+"""Fault tolerance (``repro.faults``): guard-plane detection property
+(any single-cell flip caught, zero false positives on legit DML),
+endurance-driven row death -> remap -> oracle-parity recovery on jnp +
+pallas, retired-slot quarantine, retry/breaker units, and the
+self-healing query service integration."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import dml
+from repro.db import queries, tpch
+from repro.db.database import Engine, PimDatabase
+from repro.faults import (CircuitBreaker, DeviceFaultModel, FaultManager,
+                          RetryPolicy, TransientDispatchError)
+from repro.serve import QueryService
+
+SF, SEED = 0.002, 123
+_CACHE: dict = {}
+
+
+def _tables():
+    if "tables" not in _CACHE:
+        _CACHE["tables"] = tpch.generate(sf=SF, seed=SEED)
+    return _CACHE["tables"]
+
+
+def _fresh_db(backend: str = "jnp") -> PimDatabase:
+    # Fault tests corrupt and mutate relations: always a private
+    # PimDatabase over the shared generated tables.
+    return PimDatabase(_tables(), backend=backend)
+
+
+# --------------------------------------------------------------------------
+# Guard planes: detection property
+# --------------------------------------------------------------------------
+def _guarded():
+    # Lazy singleton, not a fixture: the hypothesis shim hides the
+    # wrapped signature from pytest (see test_fusion.py).
+    if "guarded" not in _CACHE:
+        db = _fresh_db()
+        fm = FaultManager(db)
+        fm.guard_relation("customer")
+        _CACHE["guarded"] = (db, fm)
+    return _CACHE["guarded"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**9), st.integers(0, 10**9), st.booleans())
+def test_any_single_flip_is_detected(slot_draw, plane_draw, hit_valid):
+    """Zero false negatives: every injected single-cell flip — any
+    attribute, any plane, any slot (live, deleted, or ghost capacity) —
+    is localized by the next scrub; the repair restores the planes and
+    the immediate re-scrub is clean (measured false-positive rate 0)."""
+    db, fm = _guarded()
+    d = db.dml_state("customer")
+    slot = slot_draw % d.capacity
+    if hit_valid:
+        attr, plane = "__valid__", 0
+    else:
+        attrs = sorted(d.rel.layout.attributes)
+        attr = attrs[plane_draw % len(attrs)]
+        plane = plane_draw % d.rel.layout.attributes[attr].n_bits
+    fm.inject_flip("customer", attr, slot, plane)
+    report = fm.scrub()
+    assert ("customer", attr, slot) in fm.detected
+    assert (attr, slot) in report["customer"]["corrupt"]
+    assert not fm.undetected()
+    # Repair restored the planes: the very next scrub sees nothing.
+    assert fm.scrub() == {}
+
+
+def test_legit_dml_no_false_positives():
+    """The parity expectation tracks the instruction stream exactly:
+    insert / delete / in-place update / update-by-move (widen) /
+    compact produce zero scrub detections."""
+    db = _fresh_db()
+    fm = FaultManager(db)
+    fm.guard_relation("lineitem")
+    take = {a: np.asarray(c[:6]) for a, c in db.tables["lineitem"].items()}
+    db.apply([dml.Insert("lineitem", take)])
+    db.apply([dml.Delete("lineitem", row_ids=[1, 3]),
+              dml.Update("lineitem", {"l_quantity": 9},
+                         row_ids=[0, 2])])
+    wide = 1 << db.relations["lineitem"].layout.attributes[
+        "l_quantity"].n_bits
+    db.apply([dml.Update("lineitem", {"l_quantity": wide},
+                         row_ids=[4])])       # widen + move
+    db.apply([dml.Compact("lineitem")])
+    assert fm.scrub() == {}
+    assert fm.n_detected == 0
+
+
+def test_scrub_repairs_publish_and_invalidate_cache():
+    """A repair bumps the relation version, so a result cached against
+    corrupt contents can never be served again (by construction)."""
+    db = _fresh_db()
+    fm = FaultManager(db)
+    fm.guard_relation("lineitem")
+    q6 = queries.get_query("Q6")
+    from repro.serve import spec_cache_key
+    v0 = db.relations["lineitem"].version
+    k0 = spec_cache_key(db, q6, Engine.FUSED)
+    fm.inject_flip("lineitem", "l_quantity", 5, 0)
+    # Silent corruption must NOT bump the version on its own...
+    assert db.relations["lineitem"].version == v0
+    fm.scrub()
+    # ...but detection + repair must.
+    assert db.relations["lineitem"].version > v0
+    assert spec_cache_key(db, q6, Engine.FUSED) != k0
+
+
+# --------------------------------------------------------------------------
+# Hard faults: endurance death, stuck cells, remap + quarantine
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_dead_row_remap_oracle_parity(backend):
+    """A hot row whose wear crosses the endurance budget dies; the next
+    update is dropped by the device, verify-after-write flags it, the
+    scrub remaps the row into spare capacity — and the post-recovery Q6
+    aggregates stay bit-identical to the MutableTable oracle."""
+    db = _fresh_db(backend)
+    layout = db.relations["lineitem"].layout
+    budget = layout.row_bits + 1.5 * layout.attributes["l_quantity"].n_bits
+    fm = FaultManager(db, endurance_budget=budget)
+    fm.guard_relation("lineitem")
+    oracle = dml.MutableTable(db.tables["lineitem"])
+    spec = queries.get_query("Q6")
+    fm.arm()
+    try:
+        died = []
+        for rnd in range(40):
+            m = dml.Update("lineitem", {"l_quantity": rnd % 50 + 1},
+                           row_ids=[0])
+            db.apply([m])
+            oracle.apply(m)
+            died = fm.update_wear("lineitem")
+            if died:
+                break
+        assert died, "endurance budget never crossed"
+        dead_slot = died[0]
+        # The next update to the dead row is silently dropped by the
+        # device...
+        m = dml.Update("lineitem", {"l_quantity": 33}, row_ids=[0])
+        db.apply([m])
+        oracle.apply(m)
+        assert fm.n_write_faults > 0
+        # ...and the scrub remaps the row off the dead slot.
+        report = fm.scrub()
+        assert report["lineitem"]["hard"] == [dead_slot]
+        d = db.dml_state("lineitem")
+        assert d.slot_of[0] != dead_slot
+        assert d.segments.n_retired == 1
+        assert fm.n_remapped_rows == 1
+    finally:
+        fm.disarm()
+    # Post-recovery parity against the independent oracle.
+    r = db.execute(spec.filter_only(), engine=Engine.FUSED)
+    exp = oracle.aggregate(spec.filters["lineitem"], spec.aggregates)
+    got = tuple(r.aggregates["all"][a.name] for a in spec.aggregates)
+    assert got == exp
+    # Retired slots are never handed out again.
+    take = {a: np.asarray(c[:64]) for a, c in db.tables["lineitem"].items()}
+    new_ids = db.dml_state("lineitem").insert(take)
+    assert dead_slot not in {db.dml_state("lineitem").slot_of[i]
+                             for i in new_ids}
+
+
+def test_stuck_cell_is_hard_and_remapped():
+    db = _fresh_db()
+    fm = FaultManager(db)
+    fm.guard_relation("lineitem")
+    d = db.dml_state("lineitem")
+    # Pick a live slot whose plane-0 l_quantity bit is 0 so stuck-at-1
+    # is immediately observable.
+    slot = next(s for s in range(d.capacity)
+                if d.live[s] and not (int(d.shadow["l_quantity"][s]) & 1))
+    lid = next(i for i, sl in d.slot_of.items() if sl == slot)
+    fm.arm()
+    try:
+        fm.inject_stuck("lineitem", "l_quantity", slot, 0, 1)
+        report = fm.scrub()
+        assert report["lineitem"]["hard"] == [slot]
+        assert d.slot_of[lid] != slot
+        assert d.segments.n_retired == 1
+        # The moved row reads back its true value from the new slot.
+        assert fm.scrub() == {}
+    finally:
+        fm.disarm()
+
+
+def test_ghost_valid_flip_repaired():
+    """A flipped valid bit in never-allocated capacity makes a ghost row
+    visible; the scrub detects it and the rewrite clears it again."""
+    db = _fresh_db()
+    fm = FaultManager(db)
+    fm.guard_relation("lineitem")
+    d = db.dml_state("lineitem")
+    ghost = d.capacity - 1
+    assert not d.live[ghost]
+    baseline = db.run_baseline(queries.get_query("Q6").filter_only())
+    fm.inject_flip("lineitem", "__valid__", ghost, 0)
+    report = fm.scrub()
+    assert ("__valid__", ghost) in report["lineitem"]["corrupt"]
+    r = db.execute(queries.get_query("Q6").filter_only(),
+                   engine=Engine.FUSED)
+    assert r.aggregates == baseline.aggregates
+
+
+# --------------------------------------------------------------------------
+# Retry policy + circuit breaker units
+# --------------------------------------------------------------------------
+def test_retry_policy_capped_exponential():
+    rp = RetryPolicy(max_retries=4, base_delay_s=0.01, max_delay_s=0.05)
+    assert rp.delay(0) == 0.01
+    assert rp.delay(1) == 0.02
+    assert rp.delay(2) == 0.04
+    assert rp.delay(3) == 0.05      # capped
+    assert rp.delay(10) == 0.05
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=2, cooldown_windows=2)
+    assert br.state == "closed" and br.allow_fused()
+    br.record_failure()
+    assert br.state == "closed"     # below threshold
+    br.record_success()
+    br.record_failure()
+    br.record_failure()             # 2 consecutive -> trip
+    assert br.state == "open" and br.n_trips == 1
+    assert not br.allow_fused()     # cooldown window 1
+    assert br.allow_fused()         # cooldown elapsed -> half-open probe
+    assert br.state == "half_open"
+    br.record_failure()             # failed probe re-opens immediately
+    assert br.state == "open" and br.n_trips == 2
+    assert not br.allow_fused()
+    assert br.allow_fused()
+    br.record_success()             # successful probe closes
+    assert br.state == "closed" and br.n_recoveries == 1
+
+
+def test_device_model_dispatch_fault_queue():
+    m = DeviceFaultModel()
+    m.check_dispatch()              # empty queue: no-op
+    m.inject_dispatch_faults(2)
+    with pytest.raises(TransientDispatchError):
+        m.check_dispatch()
+    with pytest.raises(TransientDispatchError):
+        m.check_dispatch()
+    m.check_dispatch()              # drained
+    assert m.n_dispatch_faults_raised == 2
+
+
+# --------------------------------------------------------------------------
+# Self-healing service integration
+# --------------------------------------------------------------------------
+def test_service_retries_transient_dispatch_fault():
+    db = _fresh_db()
+    fm = FaultManager(db)
+    q6 = queries.get_query("Q6").filter_only()
+    expect = db.run_baseline(q6).aggregates
+
+    async def run():
+        svc = QueryService(db, max_wait_s=0.001, fault_manager=fm)
+        async with svc:
+            fm.model.inject_dispatch_faults(1)
+            r = await svc.submit(q6)
+        return r, svc
+
+    r, svc = asyncio.run(run())
+    assert r.aggregates == expect
+    assert svc.n_transient_faults == 1
+    assert svc.n_retries == 1
+    assert svc.n_fault_recovered == 1
+    assert svc.n_errors == 0
+    assert fm.breaker.state == "closed"
+
+
+def test_service_degrades_to_eager_and_recovers():
+    db = _fresh_db()
+    fm = FaultManager(db, retry=RetryPolicy(max_retries=1,
+                                            base_delay_s=0.0),
+                      breaker=CircuitBreaker(failure_threshold=1,
+                                             cooldown_windows=2))
+    q6 = queries.get_query("Q6").filter_only()
+    q1 = queries.get_query("Q1").filter_only()
+    expect6 = db.run_baseline(q6).aggregates
+    expect1 = db.run_baseline(q1).aggregates
+
+    async def run():
+        svc = QueryService(db, max_wait_s=0.001, fault_manager=fm)
+        async with svc:
+            # Exhaust retries (2 attempts) -> degrade + trip breaker.
+            fm.model.inject_dispatch_faults(2)
+            r6 = await svc.submit(q6)
+            # Breaker open: next window degrades without trying FUSED.
+            r1 = await svc.submit(q1)
+            # Cooldown elapsed: half-open probe succeeds, breaker closes.
+            take = {a: np.asarray(c[:1])
+                    for a, c in db.tables["lineitem"].items()}
+            await svc.apply([dml.Insert("lineitem", take)])
+            r6b = await svc.submit(q6)
+        return r6, r1, r6b, svc
+
+    r6, r1, r6b, svc = asyncio.run(run())
+    assert r6.aggregates == expect6          # degraded, still correct
+    assert r1.aggregates == expect1
+    assert svc.n_errors == 0
+    assert svc.n_degraded_windows == 2
+    assert svc.n_fault_recovered == 2
+    assert fm.breaker.n_trips == 1
+    assert fm.breaker.n_recoveries == 1
+    assert fm.breaker.state == "closed"
+
+
+def test_chaos_soak_smoke():
+    """One short seeded chaos soak end-to-end: every injected fault
+    detected, parity + availability held, breaker recovered."""
+    from repro.faults.chaos import run_chaos
+    rep = run_chaos(sf=0.001, rounds=6, batch=16, seed=7)
+    assert rep["ok"], rep["violations"]
+    assert rep["all_detected"]
+    assert rep["parity"]
+    assert rep["detected_injected"] == rep["injected"] == 4
+    assert rep["breaker_state"] == "closed"
+    assert rep["breaker_trips"] == 1
+    assert rep["recovered_queries"] > 0
+    assert rep["remapped_rows"] > 0

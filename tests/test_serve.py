@@ -263,6 +263,73 @@ def test_service_backpressure_semaphore(db):
 
 
 # --------------------------------------------------------------------------
+# Failure paths: rejection fan-out, permit restoration, cache hygiene
+# --------------------------------------------------------------------------
+def test_dispatch_failure_propagates_to_all_coalesced_waiters(db):
+    # A dispatch-worker exception must reach EVERY awaiter parked on the
+    # window — the submitter that admitted the query AND the coalesced
+    # submissions sharing its key — and must restore the backpressure
+    # permit, or the service wedges after its first bad window.
+    q6 = queries.get_query("Q6")
+    boom = ValueError("injected dispatch failure")
+
+    def bad_dispatch(specs):
+        raise boom
+
+    async def run():
+        svc = QueryService(db, max_window=8, max_wait_s=0.05, max_pending=2)
+        real = db.dispatch_batch
+        db.dispatch_batch = bad_dispatch
+        try:
+            async with svc:
+                # Both submits land before the (slow) timer flush: the
+                # second coalesces onto the first's in-flight future.
+                res = await asyncio.gather(svc.submit(q6), svc.submit(q6),
+                                           return_exceptions=True)
+                assert [r is boom for r in res] == [True, True]
+                assert svc.stats()["coalesced"] == 1
+                # The failed admission returned its permit.
+                assert svc._sem._value == 2
+                # A failed result is never cached, and nothing is stuck
+                # in flight: a resubmit with the fault cleared dispatches
+                # fresh and matches direct execution.
+                db.dispatch_batch = real
+                key = spec_cache_key(db, q6, Engine.FUSED)
+                assert svc.cache.get(key) is None
+                assert not svc._inflight
+                ok = await svc.submit(q6)
+                assert not ok.cached
+                assert ok.aggregates == db.execute(q6).aggregates
+                return svc.stats()
+        finally:
+            db.dispatch_batch = real
+
+    stats = asyncio.run(run())
+    # One rejection (the coalesced waiter shares the future), nothing
+    # left in flight.
+    assert stats["errors"] == 1
+    assert stats["inflight"] == 0
+
+
+def test_closed_service_rejects_promptly(db):
+    # Submitting after close() must fail fast (the window handoff to the
+    # shut-down pool raises and every request is rejected) — never hang
+    # the awaiter on a future nothing will resolve.
+    q6 = queries.get_query("Q6")
+
+    async def run():
+        svc = QueryService(db, max_window=4, max_wait_s=0.001)
+        svc.close()
+        with pytest.raises(RuntimeError):
+            await asyncio.wait_for(svc.submit(q6), timeout=30)
+        assert svc._sem._value == svc.max_pending
+        return svc.stats()
+
+    stats = asyncio.run(run())
+    assert stats["errors"] == 1 and stats["inflight"] == 0
+
+
+# --------------------------------------------------------------------------
 # 8-device mesh subprocess smoke test
 # --------------------------------------------------------------------------
 def test_serve_mesh_8dev_smoke():
